@@ -1,0 +1,51 @@
+"""Fig. 5a: end-to-end inference speedup of {PyTorch-eager, sequential CUDA
+Graph, Nimble, Opara} — calibrated simulator over the paper's four workloads
+and our ten assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import list_archs
+from repro.core import SimConfig, compare_policies
+from repro.core.profiler import HardwareSpec
+
+from .workloads import PAPER_WORKLOADS, arch_workload
+
+# Calibration: (a) small kernels never reach roofline — the 2 µs floor
+# models kernel setup/DMA latency (the under-utilization the paper's Fig. 1
+# measures); (b) resource_cap models the finite SM/VMEM pool — concurrent
+# ops whose working sets exceed it BLOCK (paper §2.3 "GPU blocking"), which
+# is what makes launch order matter and large-batch gains shrink (Fig. 8).
+BENCH_HW = HardwareSpec(min_kernel_us=2.0)
+# sync_us is small: event waits are captured INSIDE the graph (replay cost),
+# not host round-trips.  resource_cap = one device's occupancy budget.
+BENCH_SIM = SimConfig(resource_cap=128e6, sync_us=0.5, launch_us=8.0,
+                      interference_penalty=0.13)
+# the RTX-2080-class device of the paper's Fig. 2: ~40% of the occupancy
+# budget and non-preemptive head-of-line dispatch — launch order matters
+# most when the pool is tight and a blocked kernel stalls later launches.
+SMALL_GPU_SIM = SimConfig(resource_cap=52e6, sync_us=0.5, launch_us=8.0,
+                          interference_penalty=0.13, head_of_line=True)
+
+
+def run(batch: int = 1) -> list[str]:
+    rows = ["workload,policy,makespan_us,speedup_vs_eager,speedup_vs_cuda_graph"]
+    graphs = {name: fn(batch) for name, fn in PAPER_WORKLOADS.items()}
+    for arch in list_archs():
+        try:
+            graphs[arch] = arch_workload(arch, batch=batch)
+        except Exception:
+            continue
+    for name, g in graphs.items():
+        res = compare_policies(g, hw=BENCH_HW, cfg=BENCH_SIM)
+        base = res["cuda_graph_sequential"]["makespan_us"]
+        for policy, r in res.items():
+            rows.append(
+                f"{name},{policy},{r['makespan_us']:.1f},"
+                f"{r.get('speedup_vs_eager', 0):.2f},"
+                f"{base / r['makespan_us']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

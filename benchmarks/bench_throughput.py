@@ -1,0 +1,24 @@
+"""Fig. 8: inference throughput vs batch size (1..32), Inception-v3 —
+Opara's gain over the sequential CUDA Graph shrinks as ops fatten."""
+from __future__ import annotations
+
+from repro.core import SimConfig, schedule, sequential_makespan, simulate_plan
+
+from .bench_inference import BENCH_HW, BENCH_SIM
+from .workloads import inception_v3_like
+
+
+def run() -> list[str]:
+    rows = ["batch,cuda_graph_ips,opara_ips,speedup"]
+    for batch in (1, 2, 4, 8, 16, 32):
+        g = inception_v3_like(batch)
+        plan = schedule(g, "opara", "opara", BENCH_HW)
+        seq_us = sequential_makespan(g, plan.profiles, BENCH_SIM)
+        op_us = simulate_plan(plan, BENCH_SIM).makespan_us
+        rows.append(f"{batch},{batch / seq_us * 1e6:.1f},"
+                    f"{batch / op_us * 1e6:.1f},{seq_us / op_us:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

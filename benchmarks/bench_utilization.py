@@ -1,0 +1,31 @@
+"""Fig. 5b / Fig. 1: device-utilization proxy (busy-time / makespan — the
+simulator twin of SM efficiency) and peak-concurrency statistics."""
+from __future__ import annotations
+
+from repro.core import SimConfig, schedule, simulate_plan
+from repro.core.fusion import fusion_stats
+
+from .bench_inference import BENCH_HW, BENCH_SIM
+from .workloads import PAPER_WORKLOADS
+
+
+def run() -> list[str]:
+    # avg_concurrency = busy-time / makespan (1.0 = sequential; >1 = parallel
+    # lanes active) — the simulator twin of the paper's SM-efficiency gain.
+    rows = ["workload,policy,avg_concurrency,n_streams,fusion_ratio"]
+    for name, fn in PAPER_WORKLOADS.items():
+        g = fn(1)
+        for alloc, order, label in (
+                ("sequential", "topo", "cuda_graph"),
+                ("nimble", "topo", "nimble"),
+                ("opara", "opara", "opara")):
+            plan = schedule(g, alloc, order, BENCH_HW)
+            res = simulate_plan(plan, BENCH_SIM)
+            conc = res.busy_us / res.makespan_us
+            fr = fusion_stats(plan.waves)["fusion_ratio"]
+            rows.append(f"{name},{label},{conc:.2f},{plan.n_streams},{fr:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,35 @@
+"""Small payload-bearing graph used by overhead/wallclock benchmarks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import OpGraph, OpKind
+from repro.core.profiler import elementwise_cost, gemm_cost
+
+
+def build_payload_graph(n_blocks: int = 4, width: int = 4, d: int = 64,
+                        tokens: int = 8, seed: int = 0) -> OpGraph:
+    rng = np.random.default_rng(seed)
+    g = OpGraph("payload")
+    cur = g.add("x", OpKind.INPUT, out_shape=(tokens, d))
+    for blk in range(n_blocks):
+        outs = []
+        for b in range(width):
+            w = jnp.asarray(rng.standard_normal((d, d)) * 0.05, jnp.float32)
+            c = g.add(f"b{blk}_{b}_gemm", OpKind.GEMM, [cur],
+                      fn=lambda x, w: x @ w, consts=(w,),
+                      cost=gemm_cost(tokens, d, d, 4),
+                      fuse_sig=("gemm", tokens, d, d),
+                      out_shape=(tokens, d))
+            r = g.add(f"b{blk}_{b}_relu", OpKind.ELEMENTWISE, [c],
+                      fn=jax.nn.relu, cost=elementwise_cost(tokens * d, 4),
+                      fuse_sig=("relu", tokens, d), out_shape=(tokens, d))
+            outs.append(r)
+        cur = g.add(f"b{blk}_sum", OpKind.ELEMENTWISE, outs,
+                    fn=lambda *xs: sum(xs),
+                    cost=elementwise_cost(tokens * d, 4, n_in=width),
+                    out_shape=(tokens, d))
+    g.validate()
+    return g

@@ -1,0 +1,62 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections:
+    table1_scheduler     Alg. 1 vs Nimble scheduling cost        (Table 1)
+    fig5a_inference      4-policy inference speedups             (Fig. 5a)
+    fig5b_utilization    utilization proxy + stream counts       (Fig. 5b/1)
+    fig2_launch_order    depth-first vs Opara order              (Fig. 2)
+    fig8_throughput      throughput vs batch size                (Fig. 8)
+    sec5_3_overhead      profiling + scheduling overhead         (§5.3)
+    wallclock            real CPU wall-clock eager/jit/fused     (Fig. 5a mech.)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow wallclock section")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from . import (bench_inference, bench_launch_order, bench_overhead,
+                   bench_scheduler, bench_throughput, bench_utilization,
+                   bench_wallclock)
+
+    sections = [
+        ("table1_scheduler", bench_scheduler.run),
+        ("fig5a_inference", bench_inference.run),
+        ("fig5b_utilization", bench_utilization.run),
+        ("fig2_launch_order", bench_launch_order.run),
+        ("fig8_throughput", bench_throughput.run),
+        ("sec5_3_overhead", bench_overhead.run),
+    ]
+    if not args.quick:
+        sections.append(("wallclock", bench_wallclock.run))
+
+    failures = 0
+    for name, fn in sections:
+        if args.only and args.only != name:
+            continue
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.perf_counter()
+        try:
+            for row in fn():
+                print(row)
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s")
+        except Exception as e:                      # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}")
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Schedule anatomy on REAL architectures: how Opara sees Kimi-K2's expert
+fan-out, Hymba's parallel attn∥SSM heads, and RWKV6's 5-projection blocks.
+
+    PYTHONPATH=src python examples/opara_schedule_demo.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_inference import BENCH_HW as HW, BENCH_SIM
+from repro.configs import get_config
+from repro.core import compare_policies, schedule
+from repro.models.opgraph_export import build_lm_opgraph
+
+for arch in ("kimi-k2-1t-a32b", "hymba-1.5b", "rwkv6-1.6b", "qwen2-0.5b"):
+    cfg = get_config(arch)
+    for seq_len, regime in ((32, "decode/small-op regime"),
+                            (4096, "prefill/saturated regime")):
+        g = build_lm_opgraph(cfg, batch=1, seq=seq_len, n_layers=2)
+        plan = schedule(g, "opara", "opara", HW)
+        s = plan.stats()
+        print(f"\n=== {arch} @ seq={seq_len} ({regime}; {len(g)} ops) ===")
+        print(f"  streams={int(s['n_streams'])}  waves={int(s['n_waves'])}  "
+              f"fusion {int(s['n_ops'])}→{int(s['n_kernels_after_fusion'])} kernels")
+        res = compare_policies(g, hw=HW, cfg=BENCH_SIM)
+        base = res["cuda_graph_sequential"]["makespan_us"]
+        for policy in ("cuda_graph_sequential", "nimble", "opara"):
+            r = res[policy]
+            print(f"  {policy:24s} {r['makespan_us']:9.1f} us   "
+                  f"{base / r['makespan_us']:.2f}x vs sequential")
+
+print("\nNOTE: operator parallelism pays in the small-op regime (the paper's"
+      "\nFig. 1 under-utilization); at prefill scale single GEMMs saturate"
+      "\nthe device and Opara correctly degrades to the sequential schedule.")

@@ -1,0 +1,33 @@
+"""Quickstart: the whole Opara pipeline in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a branchy operator graph, runs Stream Allocation (Alg. 1) +
+resource/interference-aware launch ordering (Alg. 2), captures ONE fused
+executable (the CUDA-Graph analogue), and verifies it against eager
+op-by-op execution.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.conftest_shim import build_payload_graph
+from repro.core import api as opara
+from repro.core import run_sequential_uncompiled
+
+g = build_payload_graph(n_blocks=4, width=4, d=64, tokens=8)
+print(f"graph: {len(g)} operators, max width {g.max_width()}")
+
+plan = opara.plan(g)
+print(f"streams: {plan.n_streams}   waves: {plan.waves.n_waves}   "
+      f"kernels after fusion: {plan.waves.n_fused_kernels}")
+
+exe = opara.optimize(g)                       # capture → single executable
+x = jnp.ones((8, 64), jnp.float32)
+out = exe({"x": x})[0]
+ref = run_sequential_uncompiled(g, {"x": x})[0]
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+print("fused executable matches eager execution ✓")

@@ -1,0 +1,12 @@
+"""Serving example: continuous-batching engine over a smoke llama model.
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+res = serve("llama3.2-1b", n_requests=8, max_tokens=12, slots=4)
+print(f"\nthroughput: {res['tok_per_s']:.1f} tok/s "
+      f"({res['completed']} requests, {res['total_tokens']} tokens)")

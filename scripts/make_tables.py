@@ -1,0 +1,123 @@
+"""Render EXPERIMENTS.md tables from the sweep JSONL results."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    seen = {}
+    try:
+        for line in open(path):
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r.get("tag"))] = r  # later wins
+    except FileNotFoundError:
+        pass
+    return seen
+
+
+def gb(x):
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table(path, title):
+    seen = load(path)
+    out = [f"### {title}", "",
+           "| arch | shape | status | compile_s | args GB/dev | temp GB/dev | "
+           "fits 16GB? | HLO flops/dev | collectives (AR/AG/RS/A2A/CP) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, tag), r in sorted(seen.items()):
+        if tag:
+            continue
+        if r["status"] == "SKIP":
+            out.append(f"| {arch} | {shape} | SKIP ({r['reason'][:40]}…) "
+                       "| | | | | | |")
+            continue
+        if r["status"] != "OK":
+            out.append(f"| {arch} | {shape} | {r['status']} | | | | | | |")
+            continue
+        m = r["memory"]
+        args, temp = m["argument_size_in_bytes"], m["temp_size_in_bytes"]
+        fits = "YES" if (args + temp) <= 16 * 2**30 else f"NO ({gb(args+temp)}GB)"
+        c = r["collectives"]["count_by_kind"]
+        cc = f"{c.get('all-reduce',0)}/{c.get('all-gather',0)}/" \
+             f"{c.get('reduce-scatter',0)}/{c.get('all-to-all',0)}/" \
+             f"{c.get('collective-permute',0)}"
+        out.append(
+            f"| {arch} | {shape} | OK | {r.get('compile_s','')} | {gb(args)} "
+            f"| {gb(temp)} | {fits} | {r['cost'].get('flops',0):.3g} | {cc} |")
+    return "\n".join(out)
+
+
+def roofline_table(path):
+    seen = load(path)
+    out = ["| arch | shape | dominant | roofline frac | compute_s | memory_s "
+           "| collective_s | step LB (s) | MODEL_FLOPS | useful ratio |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, tag), r in sorted(seen.items()):
+        if tag or r["status"] != "OK":
+            if not tag and r["status"] == "SKIP":
+                out.append(f"| {arch} | {shape} | SKIP | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {arch} | {shape} | {rf['dominant'][:-2]} "
+            f"| {rf['roofline_fraction']:.3f} | {rf['compute_s']:.4f} "
+            f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| {rf['step_time_lower_bound_s']:.4f} | {r['model_flops']:.3g} "
+            f"| {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def perf_table(base_path, iter_path):
+    base = load(base_path)
+    iters = load(iter_path)
+    out = ["| cell | variant | compute_s | memory_s | collective_s | "
+           "step LB (s) | roofline frac | temp GB/dev | Δ step LB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    cells = sorted({(a, s) for (a, s, t) in iters if t})
+    for arch, shape in cells:
+        b = base.get((arch, shape, None))
+        rows = [(t, r) for (a, s, t), r in iters.items()
+                if a == arch and s == shape and t]
+        if b and b["status"] == "OK":
+            rf = b["roofline"]
+            out.append(
+                f"| {arch} × {shape} | **baseline (paper-faithful)** "
+                f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+                f"| {rf['collective_s']:.4f} | {rf['step_time_lower_bound_s']:.4f} "
+                f"| {rf['roofline_fraction']:.3f} "
+                f"| {gb(b['memory']['temp_size_in_bytes'])} | — |")
+            lb0 = rf["step_time_lower_bound_s"]
+        else:
+            lb0 = None
+        for tag, r in sorted(rows):
+            if r["status"] != "OK":
+                out.append(f"| {arch} × {shape} | {tag} | {r['status']} | | | | | | |")
+                continue
+            rf = r["roofline"]
+            lb = rf["step_time_lower_bound_s"]
+            delta = f"{(1 - lb / lb0) * 100:+.1f}%" if lb0 else ""
+            out.append(
+                f"| {arch} × {shape} | {tag} | {rf['compute_s']:.4f} "
+                f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} | {lb:.4f} "
+                f"| {rf['roofline_fraction']:.3f} "
+                f"| {gb(r['memory']['temp_size_in_bytes'])} | {delta} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print(dryrun_table("results/roofline_16x16.jsonl",
+                           "Single-pod 16×16 (256 chips)"))
+        print()
+        print(dryrun_table("results/dryrun_2x16x16.jsonl",
+                           "Multi-pod 2×16×16 (512 chips)"))
+    if which in ("all", "roofline"):
+        print()
+        print(roofline_table("results/roofline_16x16.jsonl"))
+    if which in ("all", "perf"):
+        print()
+        print(perf_table("results/roofline_16x16.jsonl",
+                         "results/perf_iterations.jsonl"))

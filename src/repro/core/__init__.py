@@ -1,0 +1,36 @@
+"""Opara core: the paper's contribution as a composable JAX module."""
+from .graph import IntensityClass, OpCost, OpGraph, OpKind, OpNode
+from .profiler import HardwareSpec, ModelProfiler, OpProfile, V5E
+from .stream_alloc import StreamPlan, allocate_streams, count_syncs
+from .nimble import allocate_streams_nimble
+from .launch_order import (
+    ORDER_POLICIES,
+    depth_first_order,
+    opara_launch_order,
+    resource_only_order,
+    topo_order,
+)
+from .fusion import Wave, WaveSchedule, build_waves, fusion_stats
+from .simulator import SimConfig, SimResult, sequential_makespan, simulate
+from .capture import CapturedGraph, capture, run_sequential_uncompiled
+from .scheduler import (
+    ALLOC_POLICIES,
+    SchedulePlan,
+    compare_policies,
+    compile_plan,
+    schedule,
+    simulate_plan,
+)
+
+__all__ = [
+    "IntensityClass", "OpCost", "OpGraph", "OpKind", "OpNode",
+    "HardwareSpec", "ModelProfiler", "OpProfile", "V5E",
+    "StreamPlan", "allocate_streams", "count_syncs", "allocate_streams_nimble",
+    "ORDER_POLICIES", "depth_first_order", "opara_launch_order",
+    "resource_only_order", "topo_order",
+    "Wave", "WaveSchedule", "build_waves", "fusion_stats",
+    "SimConfig", "SimResult", "sequential_makespan", "simulate",
+    "CapturedGraph", "capture", "run_sequential_uncompiled",
+    "ALLOC_POLICIES", "SchedulePlan", "compare_policies", "compile_plan",
+    "schedule", "simulate_plan",
+]

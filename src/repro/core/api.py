@@ -1,0 +1,41 @@
+"""User-facing Opara API.
+
+    from repro.core import api as opara
+
+    g = ...            # OpGraph emitted by a model (repro.models.*)
+    exe = opara.optimize(g)          # full pipeline → single executable
+    outs = exe({"tokens": x})
+
+``optimize`` = Alg.1 streams + profile + Alg.2 order + wave fusion + capture,
+i.e. the whole paper pipeline with one call, non-intrusively wrapping any
+operator graph.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from .capture import CapturedGraph
+from .graph import OpGraph
+from .profiler import HardwareSpec, V5E
+from .scheduler import SchedulePlan, compile_plan, schedule
+
+
+def plan(
+    graph: OpGraph,
+    alloc_policy: str = "opara",
+    order_policy: str = "opara",
+    hw: HardwareSpec = V5E,
+    measured_inputs: Mapping[int, Any] | None = None,
+) -> SchedulePlan:
+    return schedule(graph, alloc_policy, order_policy, hw, measured_inputs=measured_inputs)
+
+
+def optimize(
+    graph: OpGraph,
+    alloc_policy: str = "opara",
+    order_policy: str = "opara",
+    hw: HardwareSpec = V5E,
+    output_ids=None,
+) -> CapturedGraph:
+    p = plan(graph, alloc_policy, order_policy, hw)
+    return compile_plan(p, output_ids=output_ids)

@@ -1,0 +1,161 @@
+"""Graph Capturer (paper §3.4) — scheduled DAG → ONE jitted executable.
+
+The CUDA-Graph analogue on TPU is AOT compilation: executing the whole wave
+schedule inside a single ``jax.jit`` region removes per-op dispatch exactly
+like replaying a captured graph removes kernel-launch overhead.
+
+Execution semantics:
+  * waves run in order;
+  * within a wave, fusion groups of size > 1 are executed as ONE stacked op
+    (``jnp.stack`` inputs → vmapped payload → unstack), which XLA lowers to a
+    single batched GEMM — the horizontal-fusion realization of streams;
+  * singleton groups run as-is; XLA still sees them inside one program and
+    can interleave their DMA with neighbouring waves' compute (launch-order
+    interleaving of memory/compute ops makes this overlap *available*).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .fusion import WaveSchedule
+from .graph import OpGraph
+
+
+@dataclasses.dataclass
+class CapturedGraph:
+    """Executable artifact. Call with a dict {input_name: array}."""
+
+    graph: OpGraph
+    schedule: WaveSchedule
+    input_ids: list[int]
+    output_ids: list[int]
+    fn: Callable[..., Any]           # python callable (uncompiled)
+    jitted: Callable[..., Any]       # jit'd single-program executable
+
+    def __call__(self, inputs: Mapping[str, Any]) -> list[Any]:
+        args = self._bind(inputs)
+        return self.jitted(*args)
+
+    def call_uncompiled(self, inputs: Mapping[str, Any]) -> list[Any]:
+        args = self._bind(inputs)
+        return self.fn(*args)
+
+    def _bind(self, inputs: Mapping[str, Any]) -> list[Any]:
+        args = []
+        for i in self.input_ids:
+            name = self.graph.nodes[i].name
+            if name not in inputs:
+                raise KeyError(f"missing input {name!r}")
+            args.append(inputs[name])
+        return args
+
+
+def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
+    """A group is stackable if all ops share fuse_sig, fn arity and
+    per-branch constant shapes.
+
+    Contract: branch-varying parameters (weights) must be declared in
+    ``meta["consts"]`` — the capturer stacks them alongside the inputs and
+    executes ONE vmapped payload (the fused kernel).  Ops whose closures
+    hide differing state must leave ``fuse_sig=None``.
+    """
+    if len(group) < 2:
+        return False
+    first = graph.nodes[group[0]]
+    if first.fn is None or first.fuse_sig is None:
+        return False
+    c0 = first.meta.get("consts", ())
+    for g in group:
+        n = graph.nodes[g]
+        if n.fuse_sig != first.fuse_sig or n.fn is None:
+            return False
+        cg = n.meta.get("consts", ())
+        if len(cg) != len(c0):
+            return False
+        if any(jnp.shape(a) != jnp.shape(b) for a, b in zip(cg, c0)):
+            return False
+    return True
+
+
+def capture(
+    graph: OpGraph,
+    schedule: WaveSchedule,
+    output_ids: Sequence[int] | None = None,
+    donate_inputs: bool = False,
+) -> CapturedGraph:
+    """Build the single-program executable from a wave schedule."""
+    graph.validate()
+    input_ids = [n.op_id for n in graph if n.fn is None]
+    if output_ids is None:
+        output_ids = graph.leaves()
+    output_ids = list(output_ids)
+
+    # Pre-resolve execution program: list of steps; each step is either
+    # ("single", op_id) or ("stacked", [op_ids]) — decided once at capture.
+    program: list[tuple[str, Any]] = []
+    for wave in schedule.waves:
+        for group in wave.fusion_groups:
+            if _can_stack(graph, group):
+                program.append(("stacked", list(group)))
+            else:
+                for op in group:
+                    if graph.nodes[op].fn is not None:
+                        program.append(("single", op))
+
+    def run(*args: Any) -> list[Any]:
+        env: dict[int, Any] = dict(zip(input_ids, args))
+        for tag, payload in program:
+            if tag == "single":
+                node = graph.nodes[payload]
+                consts = node.meta.get("consts", ())
+                env[payload] = node.fn(*[env[p] for p in node.inputs], *consts)
+            else:
+                ops = payload
+                nodes = [graph.nodes[o] for o in ops]
+                # stack each positional operand AND each per-branch constant
+                arity = len(nodes[0].inputs)
+                stacked = [
+                    jnp.stack([env[n.inputs[a]] for n in nodes]) for a in range(arity)
+                ]
+                n_consts = len(nodes[0].meta.get("consts", ()))
+                stacked += [
+                    jnp.stack([jnp.asarray(n.meta["consts"][c]) for n in nodes])
+                    for c in range(n_consts)
+                ]
+                fn0 = nodes[0].fn
+                outs = jax.vmap(fn0)(*stacked)
+                for k, o in enumerate(ops):
+                    env[o] = jax.tree_util.tree_map(lambda x: x[k], outs)
+        return [env[o] for o in output_ids]
+
+    jit_kwargs: dict[str, Any] = {}
+    if donate_inputs:
+        jit_kwargs["donate_argnums"] = tuple(range(len(input_ids)))
+    return CapturedGraph(
+        graph=graph,
+        schedule=schedule,
+        input_ids=input_ids,
+        output_ids=output_ids,
+        fn=run,
+        jitted=jax.jit(run, **jit_kwargs),
+    )
+
+
+def run_sequential_uncompiled(graph: OpGraph, inputs: Mapping[str, Any]) -> list[Any]:
+    """Eager per-op execution in topo order — the "stock PyTorch" baseline:
+    every op is dispatched separately from Python (launch overhead included).
+    """
+    env: dict[int, Any] = {}
+    for i in graph.topological_order():
+        node = graph.nodes[i]
+        if node.fn is None:
+            env[i] = inputs[node.name]
+        else:
+            consts = node.meta.get("consts", ())
+            env[i] = jax.block_until_ready(
+                node.fn(*[env[p] for p in node.inputs], *consts))
+    return [env[o] for o in graph.leaves()]

@@ -1,0 +1,260 @@
+"""Operator DAG intermediate representation.
+
+This is the graph Opara schedules: every node is a DNN operator with a
+callable payload (pure function of jnp arrays), explicit data dependencies,
+and a resource profile filled in by the Model Profiler
+(:mod:`repro.core.profiler`).
+
+The IR intentionally mirrors ``torch.fx.Graph`` at the granularity the paper
+uses (one node per framework-level operator: a GEMM, a norm, a gather, ...),
+not per-HLO.  Models in :mod:`repro.models` emit an ``OpGraph`` for their
+block structure via :class:`GraphBuilder`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+
+class OpKind(enum.Enum):
+    """Coarse operator taxonomy (used for fusion signatures + intensity)."""
+
+    GEMM = "gemm"              # dense matmul / einsum
+    CONV = "conv"              # convolution (stub frontends)
+    ATTENTION = "attention"    # fused attention block
+    SCAN = "scan"              # linear recurrence (SSM / RWKV)
+    NORM = "norm"              # layernorm / rmsnorm
+    ELEMENTWISE = "elementwise"
+    GATHER = "gather"          # embedding lookup / index select
+    SCATTER = "scatter"        # MoE dispatch / combine
+    REDUCE = "reduce"          # softmax denominators, pooling, logits reduce
+    INPUT = "input"
+    OUTPUT = "output"
+
+
+class IntensityClass(enum.Enum):
+    """Paper §3.3: operators are classified compute- vs memory-intensive."""
+
+    COMPUTE = "compute"
+    MEMORY = "memory"
+
+
+@dataclasses.dataclass
+class OpCost:
+    """Resource demands of one operator.
+
+    GPU Opara profiles (threads, registers, shared memory) per block; the TPU
+    analogue (DESIGN.md §2) is (FLOPs, HBM bytes, VMEM working set).
+
+    ``resource_demand()`` is the scalar Alg. 2 sorts on ("least amount of GPU
+    resources" in the paper): we use the VMEM working set, the unit that
+    fragments on TPU the way SM slots fragment on A100.
+    """
+
+    flops: float = 0.0
+    bytes_read: float = 0.0
+    bytes_written: float = 0.0
+    vmem_bytes: float = 0.0          # working-set estimate
+    # fraction of the device's parallel compute the op can occupy (GPU: SM
+    # occupancy; TPU: MXU/VPU lane utilization).  Small ops occupy little —
+    # the paper's Fig. 1 under-utilization — leaving room for concurrent
+    # lanes; big-batch ops saturate (Fig. 8 diminishing gains).
+    occupancy: float | None = None
+    measured_us: float | None = None  # optional measured wall-time
+
+    OCCUPANCY_UNIT = 128 * 2**20     # demand units when occupancy is set
+
+    @property
+    def bytes_total(self) -> float:
+        return self.bytes_read + self.bytes_written
+
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_total, 1.0)
+
+    def resource_demand(self) -> float:
+        if self.occupancy is not None:
+            return self.occupancy * self.OCCUPANCY_UNIT
+        return self.vmem_bytes
+
+    def intensity(self, machine_balance: float) -> IntensityClass:
+        if self.arithmetic_intensity() >= machine_balance:
+            return IntensityClass.COMPUTE
+        return IntensityClass.MEMORY
+
+
+@dataclasses.dataclass
+class OpNode:
+    """One operator in the DAG."""
+
+    op_id: int
+    name: str
+    kind: OpKind
+    fn: Callable[..., Any] | None = None   # payload: positional jnp arrays
+    inputs: tuple[int, ...] = ()           # producer op_ids (ordered args)
+    out_shape: tuple[int, ...] | None = None
+    out_dtype: Any = None
+    cost: OpCost = dataclasses.field(default_factory=OpCost)
+    # Fusion signature: ops with the same non-None signature appearing in the
+    # same wave can be horizontally fused (stacked into one kernel).
+    fuse_sig: tuple | None = None
+    # Free-form metadata (e.g. which weight a GEMM consumes).
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __hash__(self) -> int:  # allow set membership keyed by identity
+        return self.op_id
+
+
+class OpGraph:
+    """A DAG of :class:`OpNode`.  Insertion order is a topological order.
+
+    Invariants (enforced by :meth:`validate` and hypothesis tests):
+      * acyclic — every edge points from a lower to a higher ``op_id``
+        (builders always reference already-created nodes);
+      * ``inputs`` of a node only reference existing nodes.
+    """
+
+    def __init__(self, name: str = "graph") -> None:
+        self.name = name
+        self.nodes: dict[int, OpNode] = {}
+        self._next_id = 0
+
+    # -- construction -------------------------------------------------------
+    def add(
+        self,
+        name: str,
+        kind: OpKind,
+        inputs: Sequence[int] = (),
+        fn: Callable[..., Any] | None = None,
+        out_shape: tuple[int, ...] | None = None,
+        out_dtype: Any = None,
+        cost: OpCost | None = None,
+        fuse_sig: tuple | None = None,
+        **meta: Any,
+    ) -> int:
+        for i in inputs:
+            if i not in self.nodes:
+                raise ValueError(f"op {name!r}: unknown input id {i}")
+        op_id = self._next_id
+        self._next_id += 1
+        self.nodes[op_id] = OpNode(
+            op_id=op_id,
+            name=name,
+            kind=kind,
+            fn=fn,
+            inputs=tuple(inputs),
+            out_shape=out_shape,
+            out_dtype=out_dtype,
+            cost=cost or OpCost(),
+            fuse_sig=fuse_sig,
+            meta=dict(meta),
+        )
+        return op_id
+
+    # -- topology queries ----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __iter__(self) -> Iterable[OpNode]:
+        return iter(self.nodes.values())
+
+    def predecessors(self, op_id: int) -> tuple[int, ...]:
+        return self.nodes[op_id].inputs
+
+    def successors_map(self) -> dict[int, list[int]]:
+        succ: dict[int, list[int]] = {i: [] for i in self.nodes}
+        for node in self.nodes.values():
+            for p in node.inputs:
+                succ[p].append(node.op_id)
+        return succ
+
+    def indegree_map(self) -> dict[int, int]:
+        return {i: len(set(n.inputs)) for i, n in self.nodes.items()}
+
+    def roots(self) -> list[int]:
+        return [i for i, n in self.nodes.items() if not n.inputs]
+
+    def leaves(self) -> list[int]:
+        succ = self.successors_map()
+        return [i for i in self.nodes if not succ[i]]
+
+    def topological_order(self) -> list[int]:
+        """Kahn order with FIFO tie-break == insertion order (the paper's
+        default "topological sorting order" baseline)."""
+        indeg = self.indegree_map()
+        succ = self.successors_map()
+        ready = sorted(i for i, d in indeg.items() if d == 0)
+        out: list[int] = []
+        import heapq
+
+        heapq.heapify(ready)
+        while ready:
+            i = heapq.heappop(ready)
+            out.append(i)
+            for s in succ[i]:
+                # inputs may repeat; only decrement once per unique edge
+                pass
+            for s in set(succ[i]):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    heapq.heappush(ready, s)
+        if len(out) != len(self.nodes):
+            raise ValueError("graph has a cycle")
+        return out
+
+    def depth_first_order(self) -> list[int]:
+        """Depth-first topological order (paper Fig. 2 "order 1" baseline)."""
+        succ = self.successors_map()
+        indeg = self.indegree_map()
+        stack = sorted((i for i, d in indeg.items() if d == 0), reverse=True)
+        out: list[int] = []
+        while stack:
+            i = stack.pop()
+            out.append(i)
+            for s in sorted(set(succ[i]), reverse=True):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    stack.append(s)
+        if len(out) != len(self.nodes):
+            raise ValueError("graph has a cycle")
+        return out
+
+    def validate(self) -> None:
+        for node in self.nodes.values():
+            for p in node.inputs:
+                if p not in self.nodes:
+                    raise ValueError(f"dangling edge {p}->{node.op_id}")
+                if p >= node.op_id:
+                    raise ValueError(
+                        f"non-topological edge {p}->{node.op_id}; graph must be "
+                        "built producer-first"
+                    )
+        self.topological_order()  # raises on cycle
+
+    def max_width(self) -> int:
+        """Maximum antichain width by longest-path leveling (the paper notes
+        Alg. 1's inner loop is bounded by graph width, typically < 20)."""
+        level: dict[int, int] = {}
+        for i in self.topological_order():
+            node = self.nodes[i]
+            level[i] = 1 + max((level[p] for p in node.inputs), default=-1)
+        from collections import Counter
+
+        return max(Counter(level.values()).values()) if level else 0
+
+    def critical_path_cost(self, duration: Mapping[int, float]) -> float:
+        """Lower bound on makespan given per-op durations."""
+        best: dict[int, float] = {}
+        for i in self.topological_order():
+            node = self.nodes[i]
+            best[i] = duration[i] + max((best[p] for p in node.inputs), default=0.0)
+        return max(best.values(), default=0.0)
+
+
+def sequential_chain(n: int, kind: OpKind = OpKind.GEMM) -> OpGraph:
+    """Tiny helper used by tests: a pure chain (no parallelism)."""
+    g = OpGraph("chain")
+    prev: list[int] = []
+    for i in range(n):
+        prev = [g.add(f"op{i}", kind, inputs=prev)]
+    return g

@@ -1,0 +1,207 @@
+"""Model Profiler (paper §3.2), adapted to TPU.
+
+GPU Opara profiles per-block (threads, registers, shared memory) with
+``torch.profiler``.  On TPU the analogous per-operator resource demands are
+(FLOPs, HBM bytes moved, VMEM working set) — see DESIGN.md §2.  Two modes:
+
+* **analytic** — models fill :class:`OpCost` at graph-build time from shapes
+  (always available; used for dry-runs at production scale);
+* **measured** — one profiling inference per model (the paper's "profile each
+  DNN inference only once"): every op payload is timed on the host device and
+  ``measured_us`` recorded.  Used by the CPU wall-clock benchmarks.
+
+The intensity classification (compute- vs memory-intensive, paper §3.3 /
+Fig. 3) falls out of arithmetic intensity vs the machine balance point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+
+from .graph import IntensityClass, OpCost, OpGraph, OpNode
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants. Defaults = TPU v5e (per instructions)."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s
+    ici_bw: float = 50e9              # bytes/s per link
+    vmem_bytes: float = 128 * 2**20   # ~128 MiB VMEM per core (v5e ~128MB)
+    hbm_bytes: float = 16 * 2**30     # 16 GiB HBM
+    # execution-time floor for one kernel (setup/drain of the systolic array,
+    # DMA latency): small ops never hit the roofline — this is exactly the
+    # under-utilization the paper's Fig. 1 measures on GPUs.  0 in unit
+    # tests; benchmarks use ~2 µs.
+    min_kernel_us: float = 0.0
+
+    @property
+    def machine_balance(self) -> float:
+        """FLOP/byte at the roofline ridge point (~240 for v5e)."""
+        return self.peak_flops / self.hbm_bw
+
+
+V5E = HardwareSpec()
+
+
+@dataclasses.dataclass
+class OpProfile:
+    """Profiler output for one op."""
+
+    cost: OpCost
+    intensity: IntensityClass
+    est_us: float  # roofline-model execution time estimate
+
+
+class ModelProfiler:
+    """Computes per-op profiles for an :class:`OpGraph`."""
+
+    def __init__(self, hw: HardwareSpec = V5E):
+        self.hw = hw
+
+    # -- analytic ------------------------------------------------------------
+    def roofline_us(self, cost: OpCost) -> float:
+        """max(compute time, memory time, kernel floor) — roofline estimate."""
+        t_c = cost.flops / self.hw.peak_flops
+        t_m = cost.bytes_total / self.hw.hbm_bw
+        return max(max(t_c, t_m) * 1e6, self.hw.min_kernel_us)
+
+    def profile(self, graph: OpGraph) -> dict[int, OpProfile]:
+        out: dict[int, OpProfile] = {}
+        for node in graph:
+            est = node.cost.measured_us
+            if est is None:
+                est = self.roofline_us(node.cost)
+            out[node.op_id] = OpProfile(
+                cost=node.cost,
+                intensity=node.cost.intensity(self.hw.machine_balance),
+                est_us=max(est, 1e-3),
+            )
+        return out
+
+    # -- measured (one inference pass, paper §3.2) ----------------------------
+    def profile_measured(
+        self,
+        graph: OpGraph,
+        inputs: Mapping[int, Any],
+        repeats: int = 3,
+    ) -> dict[int, OpProfile]:
+        """Execute the graph once op-by-op, timing each payload.
+
+        ``inputs`` maps INPUT-node op_ids to concrete arrays.  The paper's
+        single profiling run; we keep ``repeats`` tiny because kernel launch
+        noise on CPU is high.
+        """
+        values: dict[int, Any] = dict(inputs)
+        profiles = self.profile(graph)
+        for i in graph.topological_order():
+            node = graph.nodes[i]
+            if node.fn is None:
+                if i not in values:
+                    raise ValueError(f"input op {node.name} has no value bound")
+                continue
+            args = [values[p] for p in node.inputs]
+            args += list(node.meta.get("consts", ()))
+            # compile/once then time
+            values[i] = node.fn(*args)
+            values[i] = jax.block_until_ready(values[i])
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out = jax.block_until_ready(node.fn(*args))
+            dt = (time.perf_counter() - t0) / repeats * 1e6
+            node.cost.measured_us = dt
+            profiles[i] = OpProfile(
+                cost=node.cost,
+                intensity=node.cost.intensity(self.hw.machine_balance),
+                est_us=max(dt, 1e-3),
+            )
+            values[i] = out
+        return profiles
+
+
+# -- analytic cost constructors (used by models when emitting graphs) --------
+
+def gemm_cost(m: int, k: int, n: int, dtype_bytes: int = 2, batch: int = 1) -> OpCost:
+    flops = 2.0 * batch * m * k * n
+    br = batch * (m * k + k * n) * dtype_bytes
+    bw = batch * m * n * dtype_bytes
+    # VMEM working set: one MXU tile pass — bounded by operand tiles, not the
+    # whole tensor; approximate with min(whole operands, 3 × 128-wide tiles).
+    tile = 128
+    vmem = dtype_bytes * min(
+        batch * (m * k + k * n + m * n),
+        (m * tile + tile * n + m * n) if k > tile else batch * (m * k + k * n + m * n),
+    )
+    # occupancy: output parallelism vs the device's lane budget (~512k)
+    occ = min(1.0, batch * m * n / float(1 << 19))
+    return OpCost(flops=flops, bytes_read=br, bytes_written=bw,
+                  vmem_bytes=float(vmem), occupancy=occ)
+
+
+def elementwise_cost(numel: int, dtype_bytes: int = 2, n_in: int = 1, flops_per_elem: float = 1.0) -> OpCost:
+    return OpCost(
+        flops=flops_per_elem * numel,
+        bytes_read=float(n_in * numel * dtype_bytes),
+        bytes_written=float(numel * dtype_bytes),
+        vmem_bytes=float(min((n_in + 1) * numel * dtype_bytes, 8 * 2**20)),
+        occupancy=min(1.0, numel / float(1 << 21)),
+    )
+
+
+def norm_cost(numel: int, dtype_bytes: int = 2) -> OpCost:
+    return OpCost(
+        flops=5.0 * numel,
+        bytes_read=float(numel * dtype_bytes),
+        bytes_written=float(numel * dtype_bytes),
+        vmem_bytes=float(min(2 * numel * dtype_bytes, 4 * 2**20)),
+        occupancy=min(1.0, numel / float(1 << 21)),
+    )
+
+
+def gather_cost(rows: int, width: int, dtype_bytes: int = 2) -> OpCost:
+    n = rows * width
+    return OpCost(
+        flops=0.0,
+        bytes_read=float(n * dtype_bytes + rows * 4),
+        bytes_written=float(n * dtype_bytes),
+        vmem_bytes=float(min(n * dtype_bytes, 4 * 2**20)),
+        occupancy=min(1.0, n / float(1 << 21)),
+    )
+
+
+def attention_cost(b: int, q: int, kv: int, h: int, d: int, kvh: int, dtype_bytes: int = 2) -> OpCost:
+    flops = 4.0 * b * h * q * kv * d  # QK^T + PV
+    br = float(dtype_bytes * b * (q * h * d + 2 * kv * kvh * d))
+    bw = float(dtype_bytes * b * q * h * d)
+    vmem = float(dtype_bytes * (128 * d + 2 * 512 * d + 128 * 512))  # flash tiles
+    occ = min(1.0, b * h * q * d / float(1 << 19))
+    return OpCost(flops=flops, bytes_read=br, bytes_written=bw, vmem_bytes=vmem,
+                  occupancy=occ)
+
+
+def scan_cost(b: int, t: int, d: int, state: int, dtype_bytes: int = 2) -> OpCost:
+    """Linear recurrence (RWKV/Mamba): ~10 flops/elem/state, streaming reads."""
+    flops = 10.0 * b * t * d * max(state, 1)
+    br = float(dtype_bytes * b * t * d * 4)
+    bw = float(dtype_bytes * b * t * d)
+    return OpCost(flops=flops, bytes_read=br, bytes_written=bw,
+                  vmem_bytes=float(dtype_bytes * min(b, 8) * d * max(state, 1) * 4),
+                  occupancy=min(1.0, b * d / float(1 << 19)))
+
+
+def summarize(graph: OpGraph, profiles: dict[int, OpProfile]) -> dict[str, float]:
+    n_c = sum(1 for p in profiles.values() if p.intensity is IntensityClass.COMPUTE)
+    return {
+        "ops": float(len(graph)),
+        "compute_ops": float(n_c),
+        "memory_ops": float(len(graph) - n_c),
+        "total_flops": float(sum(p.cost.flops for p in profiles.values())),
+        "total_bytes": float(sum(p.cost.bytes_total for p in profiles.values())),
+        "sum_est_us": float(sum(p.est_us for p in profiles.values())),
+    }

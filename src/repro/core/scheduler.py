@@ -1,0 +1,146 @@
+"""End-to-end Opara pipeline (paper Fig. 4).
+
+DNN model + inputs → Stream Allocator → Model Profiler → Operator Launcher
+→ Graph Capturer → parallelized executable.
+
+``schedule()`` is the core entry point; :mod:`repro.core.api` wraps it for
+user models.  Every stage is swappable so benchmarks can mix and match
+(e.g. Nimble streams + topo order = the Nimble baseline; one stream + topo
+order = sequential CUDA Graph baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Mapping
+
+from .capture import CapturedGraph, capture
+from .fusion import WaveSchedule, build_waves, fusion_stats
+from .graph import OpGraph
+from .launch_order import ORDER_POLICIES, validate_order
+from .nimble import allocate_streams_nimble
+from .profiler import HardwareSpec, ModelProfiler, OpProfile, V5E
+from .simulator import SimConfig, SimResult, sequential_makespan, simulate
+from .stream_alloc import StreamPlan, allocate_streams, count_syncs
+
+
+@dataclasses.dataclass
+class SchedulePlan:
+    """Everything the capturer / simulator needs, plus bookkeeping."""
+
+    graph: OpGraph
+    stream_plan: StreamPlan
+    order: list[int]
+    waves: WaveSchedule
+    profiles: dict[int, OpProfile]
+    alloc_policy: str
+    order_policy: str
+    alloc_time_ms: float
+    order_time_ms: float
+
+    @property
+    def n_streams(self) -> int:
+        return self.stream_plan.n_streams
+
+    def stats(self) -> dict[str, float]:
+        s = fusion_stats(self.waves)
+        s.update(
+            n_streams=float(self.n_streams),
+            n_syncs=float(count_syncs(self.graph, self.stream_plan)),
+            alloc_time_ms=self.alloc_time_ms,
+            order_time_ms=self.order_time_ms,
+        )
+        return s
+
+
+ALLOC_POLICIES = {
+    "opara": allocate_streams,
+    "nimble": allocate_streams_nimble,
+    "sequential": lambda g: StreamPlan(stream_of={i: 0 for i in g.nodes}, n_streams=1),
+}
+
+
+def schedule(
+    graph: OpGraph,
+    alloc_policy: str = "opara",
+    order_policy: str = "opara",
+    hw: HardwareSpec = V5E,
+    max_lanes: int | None = None,
+    measured_inputs: Mapping[int, Any] | None = None,
+) -> SchedulePlan:
+    """Run the full scheduling pipeline (no compilation)."""
+    graph.validate()
+    profiler = ModelProfiler(hw)
+    if measured_inputs is not None:
+        profiles = profiler.profile_measured(graph, measured_inputs)
+    else:
+        profiles = profiler.profile(graph)
+
+    t0 = time.perf_counter()
+    plan = ALLOC_POLICIES[alloc_policy](graph)
+    t_alloc = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    order = ORDER_POLICIES[order_policy](graph, profiles)
+    t_order = (time.perf_counter() - t0) * 1e3
+    validate_order(graph, order)
+
+    if alloc_policy == "sequential":
+        max_lanes = 1
+    waves = build_waves(graph, plan, order, max_lanes=max_lanes)
+    return SchedulePlan(
+        graph=graph,
+        stream_plan=plan,
+        order=order,
+        waves=waves,
+        profiles=profiles,
+        alloc_policy=alloc_policy,
+        order_policy=order_policy,
+        alloc_time_ms=t_alloc,
+        order_time_ms=t_order,
+    )
+
+
+def compile_plan(plan: SchedulePlan, output_ids=None, donate_inputs=False) -> CapturedGraph:
+    return capture(plan.graph, plan.waves, output_ids=output_ids, donate_inputs=donate_inputs)
+
+
+def simulate_plan(plan: SchedulePlan, cfg: SimConfig = SimConfig()) -> SimResult:
+    return simulate(plan.graph, plan.stream_plan, plan.order, plan.profiles, cfg)
+
+
+def compare_policies(
+    graph: OpGraph,
+    hw: HardwareSpec = V5E,
+    cfg: SimConfig = SimConfig(),
+) -> dict[str, dict[str, float]]:
+    """The paper's four-way comparison on one graph (Fig. 5a analogue).
+
+    Returns {policy: {makespan_us, speedup_vs_sequential, n_streams, ...}}.
+    """
+    results: dict[str, dict[str, float]] = {}
+    seq_plan = schedule(graph, "sequential", "topo", hw)
+    t_seq_nograph = sequential_makespan(
+        graph, seq_plan.profiles, dataclasses.replace(cfg, graph_capture=False)
+    )
+    t_seq = sequential_makespan(graph, seq_plan.profiles, cfg)
+    results["pytorch_eager"] = {"makespan_us": t_seq_nograph, "speedup_vs_eager": 1.0}
+    results["cuda_graph_sequential"] = {
+        "makespan_us": t_seq,
+        "speedup_vs_eager": t_seq_nograph / t_seq,
+    }
+    for name, alloc, order in [
+        ("nimble", "nimble", "topo"),
+        ("opara", "opara", "opara"),
+    ]:
+        p = schedule(graph, alloc, order, hw)
+        r = simulate_plan(p, cfg)
+        results[name] = {
+            "makespan_us": r.makespan_us,
+            "speedup_vs_eager": t_seq_nograph / r.makespan_us,
+            "speedup_vs_cuda_graph": t_seq / r.makespan_us,
+            "n_streams": float(p.n_streams),
+            "n_syncs": float(r.n_syncs),
+            "utilization": r.utilization(max(p.n_streams, 1)),
+        }
+    return results

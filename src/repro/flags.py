@@ -1,0 +1,38 @@
+"""Perf-iteration feature flags (EXPERIMENTS.md §Perf).
+
+Every beyond-paper optimization is gated OFF by default so the paper-faithful
+baseline stays the baseline; the hillclimb harness flips them via env vars
+(read at trace time):
+
+    REPRO_CACHE_UPDATE   where | scatter      decode KV-cache write policy
+    REPRO_CHUNKED_CE     0 | 1                seq-chunked cross-entropy
+    REPRO_CAUSAL_SKIP    0 | 1                skip fully-masked KV chunks
+"""
+from __future__ import annotations
+
+import os
+
+
+def cache_update_mode() -> str:
+    return os.environ.get("REPRO_CACHE_UPDATE", "where")
+
+
+def chunked_ce() -> bool:
+    return os.environ.get("REPRO_CHUNKED_CE", "0") == "1"
+
+
+def causal_skip() -> bool:
+    return os.environ.get("REPRO_CAUSAL_SKIP", "0") == "1"
+
+
+def window_slice_decode() -> bool:
+    """O6: window-attention decode reads a dynamic slice of the KV cache
+    (window+1 slots) instead of the full sequence (masked)."""
+    return os.environ.get("REPRO_WINDOW_SLICE_DECODE", "0") == "1"
+
+
+def kv_quant() -> bool:
+    """O8: int8 MLA latent cache (per-token scales) — halves cache storage
+    and read traffic; KIVI/KVQuant-style, applied to the compressed latent
+    where quantization error is smallest."""
+    return os.environ.get("REPRO_KV_QUANT", "0") == "1"

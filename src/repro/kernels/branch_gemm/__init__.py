@@ -1,0 +1,3 @@
+from .ops import branch_gemm
+
+__all__ = ["branch_gemm"]

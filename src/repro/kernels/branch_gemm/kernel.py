@@ -1,0 +1,72 @@
+"""Horizontally-fused multi-branch GEMM — the Opara wave as ONE kernel.
+
+The paper's streams run N independent small kernels concurrently so the SM
+pool stays busy.  On TPU the MXU is one big systolic array, so the same
+insight becomes: stack the N independent GEMMs (same M,K,F signature —
+Opara's fusion groups guarantee this) into a single ``pallas_call`` whose
+grid iterates branches × tiles.  One kernel launch, zero per-branch dispatch,
+MXU tiles stay 128-aligned, and the per-branch operand DMA double-buffers
+under the previous branch's matmul (compute/memory overlap — paper Fig. 3,
+realized by Pallas' automatic pipelining across sequential grid steps).
+
+    x: [N, M, K]   w: [N, K, F]   out: [N, M, F]
+
+Grid: (N, M/bm, F/bf, K/bk) — K innermost so the fp32 VMEM accumulator
+carries across K tiles of one (branch, m, f) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(3) - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "bk", "interpret"))
+def branch_gemm_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    bm: int = 128,
+    bf: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    n, m, k = x.shape
+    n2, k2, f = w.shape
+    assert (n, k) == (n2, k2), f"shape mismatch {x.shape} @ {w.shape}"
+    bm, bf, bk = min(bm, m), min(bf, f), min(bk, k)
+    assert m % bm == 0 and f % bf == 0 and k % bk == 0, (
+        f"dims ({m},{k},{f}) must tile by ({bm},{bk},{bf})")
+    grid = (n, m // bm, f // bf, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, kk: (b, i, kk)),
+            pl.BlockSpec((1, bk, bf), lambda b, i, j, kk: (b, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bf), lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,33 @@
+"""Public jit'd wrapper: Pallas on TPU, interpret on CPU, ref fallback for
+non-tileable shapes."""
+from __future__ import annotations
+
+import jax
+
+from .. import interpret_mode
+from .kernel import branch_gemm_pallas
+from .ref import branch_gemm_ref
+
+
+def _tileable(m: int, k: int, f: int) -> bool:
+    return m % 8 == 0 and k % 128 == 0 and f % 128 == 0
+
+
+def branch_gemm(x: jax.Array, w: jax.Array, bm: int = 128, bf: int = 128,
+                bk: int = 512) -> jax.Array:
+    """Fused N-branch GEMM: [N,M,K] @ [N,K,F] → [N,M,F]."""
+    n, m, k = x.shape
+    f = w.shape[-1]
+    if not _tileable(m, k, f):
+        return branch_gemm_ref(x, w)
+    bm = min(bm, m)
+    bf = min(bf, f)
+    bk = min(bk, k)
+    while m % bm:
+        bm //= 2
+    while f % bf:
+        bf //= 2
+    while k % bk:
+        bk //= 2
+    return branch_gemm_pallas(x, w, bm=bm, bf=bf, bk=bk,
+                              interpret=interpret_mode())

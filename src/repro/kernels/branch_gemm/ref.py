@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused branch GEMM."""
+import jax.numpy as jnp
+
+
+def branch_gemm_ref(x, w):
+    """x: [N,M,K]; w: [N,K,F] → [N,M,F] with fp32 accumulation."""
+    return jnp.einsum("nmk,nkf->nmf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .ops import decode_attention, decode_attention_tpu_or_ref
+
+__all__ = ["decode_attention", "decode_attention_tpu_or_ref"]

@@ -1,0 +1,27 @@
+"""Public wrappers for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import interpret_mode
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, valid, bk: int = 512):
+    t, d = k.shape[2], q.shape[-1]
+    if t % 128 or d % 8:
+        return decode_attention_ref(q, k, v, valid)
+    bk = min(bk, t)
+    while t % bk:
+        bk //= 2
+    return decode_attention_pallas(q, k, v, valid, bk=bk,
+                                   interpret=interpret_mode())
+
+
+def decode_attention_tpu_or_ref(q, k_cache, v_cache, valid):
+    """Model-layout adapter: q [B,H,D]; caches [B,T,KVH,D]; valid [B,T]."""
+    kt = jnp.swapaxes(k_cache, 1, 2)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    return decode_attention(q, kt, vt, valid)

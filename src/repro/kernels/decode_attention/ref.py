@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for single-token decode attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: [B,H,D]; k,v: [B,KVH,T,D]; valid: [B,T] bool → [B,H,D]."""
+    b, h, d = q.shape
+    kvh = k.shape[1]
+    groups = h // kvh
+    qg = q.reshape(b, kvh, groups, d)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * d ** -0.5
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

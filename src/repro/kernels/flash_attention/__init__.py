@@ -1,0 +1,3 @@
+from .ops import flash_attention, flash_attention_tpu_or_ref
+
+__all__ = ["flash_attention", "flash_attention_tpu_or_ref"]

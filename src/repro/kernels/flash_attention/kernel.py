@@ -1,0 +1,109 @@
+"""Flash attention (causal / sliding-window, GQA) — prefill & train.
+
+TPU adaptation of the IO-aware attention insight: Q/K/V tiles stream
+HBM→VMEM once, online-softmax statistics (m, l) and the output accumulator
+live in VMEM scratch across KV tiles.  The KV loop is the innermost
+sequential grid dimension so Pallas double-buffers the next KV tile's DMA
+under the current tile's MXU work — exactly the compute/memory overlap the
+paper schedules at graph level (DESIGN.md §2).
+
+    q: [B, H, S, D]   k,v: [B, KVH, T, D]  →  out: [B, H, S, D]
+
+Grid: (B, H, S/bq, T/bk).  Causal + window masking from absolute tile
+positions; fully-masked KV tiles still execute (kernel stays shape-static;
+the skip-empty-tiles optimization is a §Perf item).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, scale: float, causal: bool, window: int):
+    kv_i = pl.program_id(3)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                    # [bq, D]
+    k = k_ref[0, 0]                                    # [bk, D]
+    v = v_ref[0, 0]                                    # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = pl.program_id(2) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                             # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                    # [bq, 1]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == pl.num_programs(3) - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,       # [B, H, S, D]
+    k: jax.Array,       # [B, KVH, T, D]
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,    # 0 → no window
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    _, kvh, t, _ = k.shape
+    groups = h // kvh
+    bq, bk = min(bq, s), min(bk, t)
+    assert s % bq == 0 and t % bk == 0
+    scale = d ** -0.5
+    grid = (b, h, s // bq, t // bk)
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, scale=scale,
+                               causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, qq, kk: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, qq, kk, g=groups: (bb, hh // g, kk, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, qq, kk, g=groups: (bb, hh // g, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, hh, qq, kk: (bb, hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""Public wrappers.  ``flash_attention`` takes [B,H,S,D] layout;
+``flash_attention_tpu_or_ref`` adapts the model's [B,S,H,D] layout and
+falls back to the reference for non-tileable shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import interpret_mode
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    if s % 8 or t % 128 or d % 8:
+        return flash_attention_ref(q, k, v, causal, window)
+    bq, bk = min(bq, s), min(bk, t)
+    while s % bq:
+        bq //= 2
+    while t % bk:
+        bk //= 2
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=interpret_mode())
+
+
+def flash_attention_tpu_or_ref(q, k, v, mask):
+    """Model-layout adapter: q [B,S,H,D], k/v [B,T,KVH,D], mask [S,T] causal.
+
+    Only exact causal masks route to the kernel; anything else uses the ref.
+    """
+    s, t = q.shape[1], k.shape[1]
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(qt, kt, vt, causal=True)
+    return jnp.swapaxes(out, 1, 2)

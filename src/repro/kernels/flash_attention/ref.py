@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: exact (non-streaming) masked softmax attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: [B,H,S,D]; k,v: [B,KVH,T,D] → [B,H,S,D]."""
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    groups = h // kvh
+    qg = q.reshape(b, kvh, groups, s, d)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * d ** -0.5
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import moe_mlp, moe_mlp_tpu_or_ref
+
+__all__ = ["moe_mlp", "moe_mlp_tpu_or_ref"]

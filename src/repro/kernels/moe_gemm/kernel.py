@@ -1,0 +1,71 @@
+"""Grouped expert GEMM with fused SwiGLU — all expert lanes as ONE kernel.
+
+This is Opara's widest wave (up to 384 parallel expert-FFN operators in
+Kimi-K2) executed as a single grouped kernel: the grid iterates
+(expert, token-tile, ffn-tile) so every MXU step is a dense 128-aligned
+matmul, and per-expert weight DMA pipelines under the previous tile's
+compute.  SwiGLU and the down-projection accumulate in VMEM — the
+memory-bound epilogue rides under the compute-bound GEMM (paper Fig. 3 at
+kernel scale).
+
+    buf:  [E, C, d]     gate/up: [E, d, f]    down: [E, f, d]
+    out:  [E, C, d] = (silu(buf@gate) * (buf@up)) @ down
+
+Grid: (E, C/bc, F/bf); the fp32 accumulator [bc, d] carries across F tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, g_ref, u_ref, d_ref, o_ref, acc_ref):
+    f_i = pl.program_id(2)
+
+    @pl.when(f_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                       # [bc, d]
+    g = g_ref[0]                                       # [d, bf]
+    u = u_ref[0]
+    dn = d_ref[0]                                      # [bf, d]
+    h = jax.nn.silu(jax.lax.dot_general(
+        x, g, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32))
+    h = h * jax.lax.dot_general(
+        x, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        h.astype(dn.dtype), dn, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f_i == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "interpret"))
+def moe_mlp_pallas(buf, gate, up, down, bc: int = 128, bf: int = 256,
+                   interpret: bool = True):
+    e, c, d = buf.shape
+    f = gate.shape[-1]
+    bc, bf = min(bc, c), min(bf, f)
+    assert c % bc == 0 and f % bf == 0
+    grid = (e, c // bc, f // bf)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda ee, cc, ff: (ee, cc, 0)),
+            pl.BlockSpec((1, d, bf), lambda ee, cc, ff: (ee, 0, ff)),
+            pl.BlockSpec((1, d, bf), lambda ee, cc, ff: (ee, 0, ff)),
+            pl.BlockSpec((1, bf, d), lambda ee, cc, ff: (ee, ff, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda ee, cc, ff: (ee, cc, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+        interpret=interpret,
+    )(buf, gate, up, down)

@@ -1,0 +1,25 @@
+"""Public wrappers for the grouped expert MLP."""
+from __future__ import annotations
+
+from .. import interpret_mode
+from .kernel import moe_mlp_pallas
+from .ref import moe_mlp_ref
+
+
+def moe_mlp(buf, gate, up, down, bc: int = 128, bf: int = 256):
+    e, c, d = buf.shape
+    f = gate.shape[-1]
+    if c % 8 or f % 128 or d % 128:
+        return moe_mlp_ref(buf, gate, up, down)
+    bc, bf = min(bc, c), min(bf, f)
+    while c % bc:
+        bc //= 2
+    while f % bf:
+        bf //= 2
+    return moe_mlp_pallas(buf, gate, up, down, bc=bc, bf=bf,
+                          interpret=interpret_mode())
+
+
+def moe_mlp_tpu_or_ref(buf, p_experts):
+    """Model adapter: p_experts = {gate, up, down} stacked [E, ...]."""
+    return moe_mlp(buf, p_experts["gate"], p_experts["up"], p_experts["down"])

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the grouped expert SwiGLU MLP."""
+import jax
+import jax.numpy as jnp
+
+
+def moe_mlp_ref(buf, gate, up, down):
+    """buf: [E,C,d]; gate/up: [E,d,f]; down: [E,f,d] → [E,C,d]."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate,
+                               preferred_element_type=jnp.float32))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, up,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("ecf,efd->ecd", h.astype(buf.dtype), down,
+                     preferred_element_type=jnp.float32)
+    return out.astype(buf.dtype)

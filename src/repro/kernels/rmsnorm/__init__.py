@@ -1,0 +1,3 @@
+from .ops import rmsnorm
+
+__all__ = ["rmsnorm"]

@@ -1,0 +1,45 @@
+"""Fused RMSNorm — the canonical memory-bound operator of the suite.
+
+One HBM read + one write per element, fp32 statistics in-register.  In the
+Opara launch order these bandwidth-bound ops are interleaved between GEMM
+waves so their DMA hides under MXU work; the kernel itself just makes sure
+the op runs at line rate (no extra mean/var round trips).
+
+    x: [N, d], scale: [d] → [N, d]
+
+Grid: (N/bn,), full row in VMEM (d ≤ a few K → fits easily).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)[None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "eps", "interpret"))
+def rmsnorm_pallas(x, scale, bn: int = 256, eps: float = 1e-6,
+                   interpret: bool = True):
+    n, d = x.shape
+    bn = min(bn, n)
+    assert n % bn == 0
+    kernel = functools.partial(_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,22 @@
+"""Public wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+from .. import interpret_mode
+from .kernel import rmsnorm_pallas
+from .ref import rmsnorm_ref
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, bn: int = 256):
+    """x: [..., d] — leading dims flattened for the kernel."""
+    shape = x.shape
+    n = 1
+    for s in shape[:-1]:
+        n *= s
+    if n % 8 or shape[-1] % 128:
+        return rmsnorm_ref(x, scale, eps)
+    x2 = x.reshape(n, shape[-1])
+    bn = min(bn, n)
+    while n % bn:
+        bn //= 2
+    out = rmsnorm_pallas(x2, scale, bn=bn, eps=eps, interpret=interpret_mode())
+    return out.reshape(shape)

@@ -1,0 +1,3 @@
+from .ops import rwkv6, rwkv6_tpu_or_ref
+
+__all__ = ["rwkv6", "rwkv6_tpu_or_ref"]

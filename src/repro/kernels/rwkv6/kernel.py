@@ -1,0 +1,84 @@
+"""RWKV6 (Finch) WKV recurrence kernel — chunked linear recurrence.
+
+    wkv_t = r_t · (diag(u)·k_tᵀv_t + S_{t-1});  S_t = diag(w_t)·S_{t-1} + k_tᵀv_t
+
+The recurrence is HBM-bandwidth-bound (state S is [K,K] per head, inputs
+stream once).  The GPU kernels (RWKV-CUDA) parallelize over (B,H) thread
+blocks with S in shared memory; the TPU adaptation keeps S resident in VMEM
+scratch across the sequential time-tile grid dimension so HBM traffic is
+exactly one read of r/k/v/w and one write of the output — and the per-step
+outer products batch into [ct,K]×[K,K] matmuls that keep the MXU busy while
+the next time tile DMAs in (the Fig. 3 overlap at kernel scale).
+
+    r,k,v,w: [B, H, T, K] fp32   u: [H, K]   s0: [B, H, K, K]
+    → out [B, H, T, K], s_final [B, H, K, K]
+
+Grid: (B, H, T/ct); time tiles innermost, state carried in scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref, s_ref,
+            *, ct: int):
+    t_i = pl.program_id(2)
+
+    @pl.when(t_i == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0]
+
+    u_col = u_ref[0][:, None]                          # [K, 1]
+    r = r_ref[0, 0]                                    # [ct, K]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    w = w_ref[0, 0]
+
+    def step(i, carry):
+        s = carry                                      # [K, K]
+        kt = k[i][:, None]                             # [K, 1]
+        vt = v[i][None, :]                             # [1, K]
+        kv = kt * vt                                   # [K, K] outer product
+        out = jnp.dot(r[i][None, :], u_col * kv + s,
+                      preferred_element_type=jnp.float32)  # [1, K]
+        o_ref[0, 0, i, :] = out[0]
+        return w[i][:, None] * s + kv
+
+    s_ref[...] = jax.lax.fori_loop(0, ct, step, s_ref[...])
+
+    @pl.when(t_i == pl.num_programs(2) - 1)
+    def _store():
+        sf_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "interpret"))
+def rwkv6_pallas(r, k, v, w, u, s0, ct: int = 64, interpret: bool = True):
+    b, h, t, kdim = r.shape
+    ct = min(ct, t)
+    assert t % ct == 0
+    grid = (b, h, t // ct)
+    kernel = functools.partial(_kernel, ct=ct)
+    io_spec = pl.BlockSpec((1, 1, ct, kdim), lambda bb, hh, tt: (bb, hh, tt, 0))
+    state_spec = pl.BlockSpec((1, 1, kdim, kdim), lambda bb, hh, tt: (bb, hh, 0, 0))
+    out, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            io_spec, io_spec, io_spec, io_spec,
+            pl.BlockSpec((1, kdim), lambda bb, hh, tt: (hh, 0)),
+            state_spec,
+        ],
+        out_specs=[io_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, kdim), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, kdim, kdim), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kdim, kdim), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, s_final

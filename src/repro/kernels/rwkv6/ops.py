@@ -1,0 +1,26 @@
+"""Public wrappers for the WKV6 recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import interpret_mode
+from .kernel import rwkv6_pallas
+from .ref import rwkv6_ref
+
+
+def rwkv6(r, k, v, w, u, s0, ct: int = 64):
+    t = r.shape[2]
+    if t % 8:
+        return rwkv6_ref(r, k, v, w, u, s0)
+    ct = min(ct, t)
+    while t % ct:
+        ct //= 2
+    return rwkv6_pallas(r, k, v, w, u, s0, ct=ct, interpret=interpret_mode())
+
+
+def rwkv6_tpu_or_ref(rh, kh, vh, wh, u, s0):
+    """Model-layout adapter: rh/kh/vh/wh [B,T,H,K] → kernel layout [B,H,T,K].
+    Returns (y [B,T,H,K], s_final [B,H,K,K])."""
+    args = [jnp.swapaxes(a, 1, 2).astype(jnp.float32) for a in (rh, kh, vh, wh)]
+    out, s_final = rwkv6(*args, u, s0)
+    return jnp.swapaxes(out, 1, 2), s_final

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: naive sequential WKV6 recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, w, u, s0):
+    """r,k,v,w: [B,H,T,K] fp32; u: [H,K]; s0: [B,H,K,K].
+    Returns (out [B,H,T,K], s_final)."""
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                           # [B,H,K]
+        kv = kt[..., :, None] * vt[..., None, :]        # [B,H,K,K]
+        out = jnp.einsum("bhk,bhkj->bhj", rt, u[None, :, :, None] * kv + s)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, w))
+    s_final, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 2), s_final

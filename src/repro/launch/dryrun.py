@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST be the first statements of this module —
+# before ANY other import — since jax locks the device count on first init.
+DOC = """Multi-pod dry-run: lower + compile EVERY (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init): the dry-run — and only the dry-run — sees 512 host
+placeholder devices so ``make_production_mesh`` can build the 16×16 and
+2×16×16 production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape prefill_32k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per cell this prints/records compiled.memory_analysis() (bytes per device —
+proves it fits or quantifies by how much it doesn't), cost_analysis()
+(FLOPs/bytes for §Roofline) and the parsed collective schedule.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, cell_applicable, get_config, list_archs
+from ..configs.base import ModelConfig, ParallelConfig, ShapeCell
+from ..models import Model
+from ..models.transformer import stack_meta
+from ..optim import adamw_init
+from ..parallel.sharding import (
+    activation_rules,
+    batch_specs,
+    cache_specs,
+    param_shardings,
+)
+from ..utils import logical_axis_rules
+from .hlo_analysis import CollectiveStats, cost_dict, memory_dict, parse_collectives
+from .mesh import make_production_mesh
+from .steps import make_decode_step, make_prefill_step, make_train_step
+
+
+def _replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def lower_cell(arch: str, shape_id: str, multi_pod: bool = False,
+               pcfg: ParallelConfig | None = None, compile_: bool = True) -> dict[str, Any]:
+    """Lower+compile one cell; returns the §Dry-run record."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape_id]
+    ok, reason = cell_applicable(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape_id, "multi_pod": multi_pod,
+                "status": "SKIP", "reason": reason}
+    pcfg = pcfg or ParallelConfig()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    model = Model(cfg)
+    params_shapes = model.init_shapes()
+    param_sh = param_shardings(mesh, params_shapes, fsdp=pcfg.fsdp,
+                               tensor_parallel=pcfg.tensor_parallel,
+                               expert_2d=pcfg.expert_2d)
+    rules = activation_rules(mesh, cell, tensor_parallel=pcfg.tensor_parallel,
+                             sequence_parallel=pcfg.sequence_parallel,
+                             expert_2d=pcfg.expert_2d)
+    inputs = model.input_specs(cell)
+    input_sh = batch_specs(mesh, cfg, inputs, cell,
+                           tensor_parallel=pcfg.tensor_parallel)
+
+    t0 = time.time()
+    with mesh:
+        with logical_axis_rules(rules, mesh):
+            if cell.step == "train":
+                from ..optim import AdamWState
+                opt_shapes = jax.eval_shape(lambda p: adamw_init(p), params_shapes)
+                # mu/nu inherit the param shardings (ZeRO-3), step replicated
+                opt_sh = AdamWState(step=_replicated(mesh), mu=param_sh, nu=param_sh)
+                step = make_train_step(model, pcfg)
+                seed = jax.ShapeDtypeStruct((), jnp.int32)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(param_sh, opt_sh, input_sh, _replicated(mesh)),
+                ).lower(params_shapes, opt_shapes, inputs, seed)
+            elif cell.step == "prefill":
+                step = make_prefill_step(model, cell)
+                lowered = jax.jit(
+                    step, in_shardings=(param_sh, input_sh),
+                ).lower(params_shapes, inputs)
+            else:  # decode
+                caches_shapes = model.decode_state_specs(cell)
+                cache_sh = cache_specs(mesh, cfg, caches_shapes, cell)
+                step = make_decode_step(model)
+                # caches are donated: the in-place-aliasable update is what
+                # production decode does (temp memory would double otherwise)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(param_sh, cache_sh,
+                                  input_sh["token"], input_sh["pos"]),
+                    donate_argnums=(1,),
+                ).lower(params_shapes, caches_shapes,
+                        inputs["token"], inputs["pos"])
+    t_lower = time.time() - t0
+
+    record: dict[str, Any] = {
+        "arch": arch, "shape": shape_id, "multi_pod": multi_pod,
+        "status": "LOWERED", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+    }
+    if not compile_:
+        return record
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 1)
+    record["status"] = "OK"
+    record["memory"] = memory_dict(compiled)
+    record["cost"] = {k: v for k, v in cost_dict(compiled).items()
+                      if k in ("flops", "bytes accessed", "transcendentals",
+                               "utilization")}
+    # collective bytes: scan bodies scaled by max stack depth (conservative:
+    # virtually all per-layer collectives sit in the layer scan)
+    depth = max((n for _, n, _ in stack_meta(cfg)), default=1)
+    if cfg.family == "encdec":
+        depth = cfg.n_layers
+    text = compiled.as_text()
+    coll = parse_collectives(text, while_multiplier=float(depth))
+    record["collectives"] = {
+        "bytes_by_kind": coll.bytes_by_kind,
+        "count_by_kind": coll.count_by_kind,
+        "total_bytes_per_device": coll.total_bytes,
+        "scan_depth_multiplier": depth,
+    }
+    record["hlo_bytes"] = len(text)
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all arch×shape×mesh cells")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in list_archs():
+            for shape_id in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape_id, mp))
+    else:
+        archs = [args.arch] if args.arch else list_archs()
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        pods = [args.multi_pod]
+        cells = [(a, s, p) for a in archs for s in shapes for p in pods]
+
+    failures = 0
+    for arch, shape_id, mp in cells:
+        tag = f"{arch} × {shape_id} × {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = lower_cell(arch, shape_id, multi_pod=mp)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape_id, "multi_pod": mp,
+                   "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        print(f"[dryrun] {tag}: {rec['status']}"
+              + (f" mem={rec.get('memory')}" if rec.get("memory") else "")
+              + (f" flops={rec.get('cost', {}).get('flops')}" if rec.get("cost") else ""))
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,108 @@
+"""Parse compiled HLO for collective traffic + combine roofline terms.
+
+``cost_analysis()`` counts a ``lax.scan`` body ONCE regardless of trip
+count (verified empirically), so per-cell totals are corrected by lowering
+ONE block separately and adding (n_layers − 1) × block_cost per stack
+(exact for uniform stacks).  The same correction applies to collective
+bytes parsed out of the HLO: collectives inside the scanned body are
+counted once by the parser and scaled by the stack depth.
+
+Collective byte accounting (per device): for each all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute op we take the output
+array bytes and weight by the ring-traffic factor (all-reduce ≈ 2×, others
+≈ 1×).  The roofline collective term is per-device bytes / link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = {
+    "all-reduce": 2.0,          # ring: 2(n-1)/n ≈ 2×
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, while_multiplier: float = 1.0) -> CollectiveStats:
+    """Sum weighted output bytes of collective ops in (optimized) HLO text.
+
+    ``while_multiplier`` scales collectives found inside computations that a
+    while loop calls (scan bodies) — pass the stack depth when known.
+    HLO computations print as blocks; we detect body computations by their
+    name containing "while" or "body" (XLA's scan lowering convention).
+    """
+    bytes_by: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count_by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    in_while_body = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers look like: `%name (param: ...) -> ... {` or `ENTRY`
+        if stripped.endswith("{") and ("(" in stripped):
+            header = stripped.split("(")[0]
+            in_while_body = ("while" in header or "body" in header or
+                             "cond" in header) and "ENTRY" not in header
+            continue
+        for kind, weight in _COLLECTIVES.items():
+            # match op occurrence, skipping async -done halves
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                lhs = stripped.split(f" {kind}")[0]
+                total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+                mult = while_multiplier if in_while_body else 1.0
+                bytes_by[kind] += weight * total * mult
+                count_by[kind] += 1
+                break
+    return CollectiveStats(bytes_by, count_by)
+
+
+def cost_dict(compiled) -> dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca) if ca else {}
+
+
+def memory_dict(compiled) -> dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out

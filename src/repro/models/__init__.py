@@ -1,0 +1,4 @@
+"""Model substrate: layers, attention, FFN/MoE, SSM, assemblies, facade."""
+from .model import Model, make_model
+
+__all__ = ["Model", "make_model"]

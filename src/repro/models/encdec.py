@@ -1,0 +1,199 @@
+"""Encoder-decoder (Whisper-style) assembly.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, T_frames, feat_dim]; a linear
+projector maps them to d_model (standing in for the 2×conv1d stem).
+
+Encoder: bidirectional self-attention, LayerNorm, GELU FFN (Whisper uses
+pre-LN transformer).  Decoder: causal self-attn + cross-attn over encoder
+output.  Cross-attention K/V are precomputed once at prefill — a parallel
+operator branch Opara overlaps with decoder self-attention projections.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..utils import shard
+from .attention import (
+    attn_decode,
+    gqa_prefill,
+    init_cache,
+    init_gqa,
+    _sdpa,
+)
+from .ffn import init_mlp, mlp
+from .layers import apply_norm, embed, init_embedding, init_linear, init_norm, linear, unembed
+
+
+def init_encoder_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+        "attn": init_gqa(ks[0], cfg),
+        "norm2": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+        "ffn": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype),
+    }
+
+
+def encoder_block(p, x, cfg: ModelConfig):
+    """Bidirectional self-attention block."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    b, s, _ = x.shape
+    hd, nh, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = linear(p["attn"]["wq"], h).reshape(b, s, nh, hd)
+    k = linear(p["attn"]["wk"], h).reshape(b, s, kvh, hd)
+    v = linear(p["attn"]["wv"], h).reshape(b, s, kvh, hd)
+    out = _sdpa(q, k, v, None)
+    x = x + linear(p["attn"]["wo"], out.reshape(b, s, nh * hd))
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    return x + mlp(p["ffn"], h2, cfg.act)
+
+
+def init_decoder_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+        "self_attn": init_gqa(ks[0], cfg),
+        "norm_x": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+        "cross_attn": init_gqa(ks[1], cfg),
+        "norm2": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+        "ffn": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype),
+    }
+
+
+def _cross_kv(p_cross, enc_out, cfg: ModelConfig):
+    b, t, _ = enc_out.shape
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    k = linear(p_cross["wk"], enc_out).reshape(b, t, kvh, hd)
+    v = linear(p_cross["wv"], enc_out).reshape(b, t, kvh, hd)
+    return k, v
+
+
+def _cross_attend(p_cross, x, ckv, cfg: ModelConfig):
+    b, s, _ = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = linear(p_cross["wq"], x).reshape(b, s, nh, hd)
+    out = _sdpa(q, ckv[0], ckv[1], None)
+    return linear(p_cross["wo"], out.reshape(b, s, nh * hd))
+
+
+def decoder_block_seq(p, x, enc_out, cfg: ModelConfig, positions, use_kernels=False):
+    """Returns (x', (self_kv, cross_kv))."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    attn_out, self_kv = gqa_prefill(p["self_attn"], h, cfg, positions, None, use_kernels)
+    x = x + attn_out
+    hx = apply_norm(p["norm_x"], x, cfg.norm)
+    ckv = _cross_kv(p["cross_attn"], enc_out, cfg)
+    x = x + _cross_attend(p["cross_attn"], hx, ckv, cfg)
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    return x + mlp(p["ffn"], h2, cfg.act), (self_kv, ckv)
+
+
+def decoder_block_step(p, x, cache, pos, cfg: ModelConfig, use_kernels=False):
+    self_kv, ckv = cache
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    attn_out, self_kv = attn_decode(p["self_attn"], h, self_kv, pos, cfg, None, use_kernels)
+    x = x + attn_out
+    hx = apply_norm(p["norm_x"], x, cfg.norm)
+    x = x + _cross_attend(p["cross_attn"], hx, ckv, cfg)
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    return x + mlp(p["ffn"], h2, cfg.act), (self_kv, ckv)
+
+
+# ============================ full model ====================================
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    fe = cfg.frontend
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    return {
+        "frontend_proj": init_linear(ks[0], fe.feat_dim, cfg.d_model, True, cfg.dtype),
+        "enc_pos": (jax.random.normal(ks[1], (fe.n_tokens, cfg.d_model), jnp.float32)
+                    * 0.01).astype(cfg.dtype),
+        "enc_blocks": jax.vmap(lambda k: init_encoder_block(k, cfg))(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+        "embed": init_embedding(ks[3], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "dec_pos": (jax.random.normal(ks[4], (cfg.max_seq_len, cfg.d_model), jnp.float32)
+                    * 0.01).astype(cfg.dtype),
+        "dec_blocks": jax.vmap(lambda k: init_decoder_block(k, cfg))(
+            jax.random.split(ks[5], n_dec)),
+        "dec_norm": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, remat: bool = False):
+    """frames: [B, T_frames, feat_dim] (precomputed stub embeddings)."""
+    x = linear(params["frontend_proj"], frames)
+    x = x + params["enc_pos"][None, : x.shape[1]]
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(x, p_l):
+        return encoder_block(p_l, x, cfg), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def decode_seq(params, tokens, enc_out, cfg: ModelConfig, remat: bool = False,
+               use_kernels: bool = False):
+    """Teacher-forced decoder pass → (logits, caches)."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens) + params["dec_pos"][None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, p_l):
+        x, cache = decoder_block_seq(p_l, x, enc_out, cfg, positions, use_kernels)
+        return x, cache
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    return unembed(params["embed"], x), caches
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, rng=None, use_kernels=False,
+                remat=False):
+    enc_out = encode(params, batch["frames"], cfg, remat)
+    logits, _ = decode_seq(params, batch["tokens"], enc_out, cfg, remat, use_kernels)
+    from ..utils import shard as _shard
+    from .losses import softmax_xent
+    logits = _shard(logits, "batch", "seq", "vocab")
+    ce = softmax_xent(logits, batch["labels"])
+    return ce, {"ce": ce}
+
+
+def encdec_prefill(params, frames, tokens, cfg: ModelConfig, cache_len: int,
+                   use_kernels=False):
+    enc_out = encode(params, frames, cfg)
+    logits, caches = decode_seq(params, tokens, enc_out, cfg, False, use_kernels)
+
+    def pad_self(kv):
+        k, v = kv
+        padw = [(0, 0), (0, 0), (0, cache_len - k.shape[2]), (0, 0), (0, 0)]
+        return jnp.pad(k, padw), jnp.pad(v, padw)
+
+    self_kv, ckv = caches
+    return logits[:, -1], (pad_self(self_kv), ckv)
+
+
+def encdec_decode(params, token, caches, pos, cfg: ModelConfig, use_kernels=False):
+    x = embed(params["embed"], token[:, None])
+    x = x + params["dec_pos"][pos[0]][None, None]
+
+    def body(x, xs):
+        p_l, self_kv_l, ckv_l = xs
+        x, cache = decoder_block_step(p_l, x, (self_kv_l, ckv_l), pos, cfg, use_kernels)
+        return x, cache
+
+    self_kv, ckv = caches
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], self_kv, ckv))
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    return unembed(params["embed"], x)[:, 0], new_caches

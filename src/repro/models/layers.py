@@ -1,0 +1,93 @@
+"""Primitive layers: norms, linear, embedding, RoPE.
+
+Pure-functional: ``init_*`` returns a param pytree (dict), ``apply`` style
+functions take (params, x).  All matmuls accumulate in fp32
+(``preferred_element_type``) and keep activations in ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import shard
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.bfloat16,
+                scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_norm(d: int, kind: str = "rmsnorm", dtype=jnp.bfloat16):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(p, x, kind: str = "rmsnorm"):
+    return layernorm(p, x) if kind == "layernorm" else rmsnorm(p, x)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    y = jnp.take(p["table"], ids, axis=0)
+    return shard(y, "batch", "seq", "embed")
+
+
+def unembed(p, x):
+    """Logits head (optionally tied): [..., d] -> [..., vocab] in fp32."""
+    return jnp.einsum("...d,vd->...v", x, p["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: [..., seq, heads, d_head]; positions: [..., seq] (int)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, d/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., seq, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)

@@ -1,0 +1,49 @@
+"""Loss helpers that stay sharded.
+
+``take_along_axis`` on a vocab-sharded logits tensor makes GSPMD all-gather
+the full [B,S,V] fp32 logits (tens of GB at production scale).  The one-hot
+contraction below keeps every operand sharded over the vocab axis; the only
+cross-shard traffic is the scalar-per-token reductions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy.  logits: [B,S,V] fp32 (may be vocab-sharded);
+    labels: [B,S] int."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return (lse - gold).mean()
+
+
+def chunked_softmax_xent(x: jax.Array, head_table: jax.Array,
+                         labels: jax.Array, s_chunk: int = 512) -> jax.Array:
+    """§Perf O3: cross-entropy without ever materializing the full [B,S,V]
+    fp32 logits — the head matmul + lse + gold fuse inside a scan over
+    sequence chunks (the MaxText-style memory-term optimization).
+
+    x: [B,S,d] final hidden states; head_table: [V,d]; labels: [B,S].
+    """
+    b, s, d = x.shape
+    sc = min(s_chunk, s)
+    while s % sc:
+        sc //= 2
+    n = s // sc
+    xs = jnp.moveaxis(x.reshape(b, n, sc, d), 1, 0)          # [n,B,sc,d]
+    ls = jnp.moveaxis(labels.reshape(b, n, sc), 1, 0)        # [n,B,sc]
+
+    def chunk(total, inp):
+        xc, lc = inp
+        logits = jnp.einsum("bsd,vd->bsv", xc, head_table,
+                            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        return total + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(chunk, jnp.float32(0.0), (xs, ls))
+    return total / (b * s)

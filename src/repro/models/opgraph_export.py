@@ -1,0 +1,327 @@
+"""Export a model's block structure as an Opara :class:`OpGraph`.
+
+This is the bridge between the substrate and the paper's contribution: the
+per-layer operator DAG (QKV branches, gate∥up, expert fan-out, attn∥mamba,
+RWKV's 5 token-shift projections, …) is emitted with analytic costs so the
+Stream Allocator / Operator Launcher schedule REAL model topologies, and the
+Graph Capturer can execute them (used by benchmarks + examples with
+smoke-size weights).
+
+Payload functions close over concrete weights when ``params`` is given;
+otherwise nodes are cost-only (for scheduling/simulation at production
+scale, where we never allocate).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.graph import OpGraph, OpKind
+from ..core.profiler import (
+    attention_cost,
+    elementwise_cost,
+    gather_cost,
+    gemm_cost,
+    norm_cost,
+    scan_cost,
+)
+from .transformer import stack_meta
+
+
+def _w(params, *path):
+    if params is None:
+        return None
+    out = params
+    for p in path:
+        out = out[p]
+    return out
+
+
+def build_lm_opgraph(cfg: ModelConfig, batch: int, seq: int,
+                     params: Any = None, n_layers: int | None = None,
+                     moe_branch_cap: int = 16) -> OpGraph:
+    """Operator DAG of an LM forward pass (prefill semantics).
+
+    ``n_layers`` trims depth (graph-size control for schedulers/benchmarks);
+    MoE fan-out is capped at ``moe_branch_cap`` expert branches per layer
+    (each branch node carries 1/cap of the routed FLOPs).
+    """
+    g = OpGraph(cfg.name)
+    d, dt = cfg.d_model, 2
+    b, s = batch, seq
+    L = n_layers if n_layers is not None else cfg.n_layers
+
+    def fn_or_none(f):
+        return f if params is not None else None
+
+    x = g.add("tokens", OpKind.INPUT, out_shape=(b, s))
+    emb_w = _w(params, "embed", "table")
+    x = g.add("embed", OpKind.GATHER, [x],
+              fn=fn_or_none(lambda t: jnp.take(emb_w, t, axis=0)),
+              cost=gather_cost(b * s, d), out_shape=(b, s, d))
+
+    meta = stack_meta(cfg)
+    layer_idx = 0
+    for si, (kind, n, windows) in enumerate(meta):
+        for li in range(min(n, max(L - layer_idx, 0))):
+            tag = f"L{layer_idx}"
+            pl = (jax.tree_util.tree_map(lambda a: a[li], _w(params, "stacks")[si])
+                  if params is not None else None)
+            if kind == "rwkv":
+                x = _rwkv_layer(g, cfg, x, b, s, tag, pl)
+            elif kind == "hybrid":
+                x = _hybrid_layer(g, cfg, x, b, s, tag, pl,
+                                  windows[li] or s)
+            elif kind in ("moe",):
+                x = _dense_layer(g, cfg, x, b, s, tag, pl, moe=True,
+                                 moe_branch_cap=moe_branch_cap)
+            else:
+                x = _dense_layer(g, cfg, x, b, s, tag, pl, moe=False)
+            layer_idx += 1
+    fn = _w(params, "final_norm")
+    x = g.add("final_norm", OpKind.NORM, [x],
+              fn=fn_or_none(lambda h: _rms(fn, h)),
+              cost=norm_cost(b * s * d))
+    head = _w(params, "embed" if cfg.tie_embeddings else "head")
+    g.add("logits", OpKind.GEMM, [x],
+          fn=fn_or_none(lambda h: jnp.einsum("bsd,vd->bsv", h, head["table"])),
+          cost=gemm_cost(b * s, d, cfg.vocab_size))
+    g.validate()
+    return g
+
+
+def _rms(p, h, eps=1e-6):
+    hf = h.astype(jnp.float32)
+    v = jnp.mean(hf * hf, -1, keepdims=True)
+    return (hf * jax.lax.rsqrt(v + eps) * p["scale"].astype(jnp.float32)).astype(h.dtype)
+
+
+def _lin(p, h):
+    return jnp.einsum("...i,io->...o", h, p["w"]) + (p.get("b", 0) if p else 0)
+
+
+def _matmul(h, w):
+    return jnp.einsum("...i,io->...o", h, w)
+
+
+def _matmul_bias(h, w, bias):
+    return jnp.einsum("...i,io->...o", h, w) + bias
+
+
+def _gemm_node(g, name, inp, pl_linear, m, k, n, bias: bool):
+    """GEMM node following the capture contract: weights go in
+    meta["consts"] so same-signature branches stack into one fused kernel."""
+    if pl_linear is None:
+        return g.add(name, OpKind.GEMM, [inp], cost=gemm_cost(m, k, n),
+                     fuse_sig=("gemm", k, n, bias))
+    consts = (pl_linear["w"],) + ((pl_linear["b"],) if bias else ())
+    return g.add(name, OpKind.GEMM, [inp],
+                 fn=_matmul_bias if bias else _matmul,
+                 cost=gemm_cost(m, k, n),
+                 fuse_sig=("gemm", k, n, bias), consts=consts)
+
+
+def _dense_layer(g, cfg, x, b, s, tag, pl, moe: bool, moe_branch_cap: int = 16):
+    d, hd, nh, kvh = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    bias = cfg.qkv_bias
+    n1 = g.add(f"{tag}.norm1", OpKind.NORM, [x],
+               fn=(lambda h: _rms(pl["norm1"], h)) if pl else None,
+               cost=norm_cost(b * s * d))
+    # QKV: 3 parallel GEMM branches (the canonical Opara wave)
+    attn_p = pl["attn"] if pl else None
+    q = _gemm_node(g, f"{tag}.wq", n1, attn_p and attn_p["wq"], b * s, d, nh * hd, bias)
+    k = _gemm_node(g, f"{tag}.wk", n1, attn_p and attn_p["wk"], b * s, d, kvh * hd, bias)
+    v = _gemm_node(g, f"{tag}.wv", n1, attn_p and attn_p["wv"], b * s, d, kvh * hd, bias)
+    att = g.add(f"{tag}.attn", OpKind.ATTENTION, [q, k, v],
+                fn=(lambda qq, kk, vv: _attn_payload(cfg, qq, kk, vv)) if pl else None,
+                cost=attention_cost(b, s, s, nh, hd, kvh))
+    o = _gemm_node(g, f"{tag}.wo", att, attn_p and attn_p["wo"], b * s, nh * hd, d, False)
+    r1 = g.add(f"{tag}.res1", OpKind.ELEMENTWISE, [x, o],
+               fn=(lambda a, c: a + c) if pl else None,
+               cost=elementwise_cost(b * s * d, n_in=2))
+    n2 = g.add(f"{tag}.norm2", OpKind.NORM, [r1],
+               fn=(lambda h: _rms(pl["norm2"], h)) if pl else None,
+               cost=norm_cost(b * s * d))
+    if not moe:
+        dff = cfg.d_ff
+        ffn_p = pl["ffn"] if pl else None
+        gate = _gemm_node(g, f"{tag}.gate", n2, ffn_p and ffn_p["gate"],
+                          b * s, d, dff, False)
+        up = _gemm_node(g, f"{tag}.up", n2, ffn_p and ffn_p["up"],
+                        b * s, d, dff, False)
+        prod = g.add(f"{tag}.glu", OpKind.ELEMENTWISE, [gate, up],
+                     fn=(lambda a, c: jax.nn.silu(a) * c) if pl else None,
+                     cost=elementwise_cost(b * s * dff, n_in=2, flops_per_elem=5))
+        down = _gemm_node(g, f"{tag}.down", prod, ffn_p and ffn_p["down"],
+                          b * s, dff, d, False)
+    else:
+        e = cfg.moe
+        router = g.add(f"{tag}.router", OpKind.REDUCE, [n2],
+                       cost=gemm_cost(b * s, d, e.n_experts))
+        disp = g.add(f"{tag}.dispatch", OpKind.SCATTER, [n2, router],
+                     cost=gather_cost(b * s * e.top_k, d))
+        nb = min(e.n_experts, moe_branch_cap)
+        tok_per_branch = b * s * e.top_k / e.n_experts * (e.n_experts / nb)
+        outs = []
+        for j in range(nb):
+            eb = g.add(f"{tag}.expert{j}", OpKind.GEMM, [disp],
+                       cost=gemm_cost(int(tok_per_branch), d, 3 * e.d_expert),
+                       fuse_sig=("egemm", d, e.d_expert))
+            outs.append(eb)
+        if e.n_shared:
+            outs.append(g.add(f"{tag}.shared_expert", OpKind.GEMM, [n2],
+                              cost=gemm_cost(b * s, d, 3 * e.d_expert * e.n_shared)))
+        down = g.add(f"{tag}.combine", OpKind.SCATTER, outs + [router],
+                     cost=gather_cost(b * s * e.top_k, d))
+    out = g.add(f"{tag}.res2", OpKind.ELEMENTWISE, [r1, down],
+                fn=(lambda a, c: a + c) if pl else None,
+                cost=elementwise_cost(b * s * d, n_in=2))
+    return out
+
+
+def _attn_payload(cfg, q, k, v):
+    from .attention import _sdpa, causal_window_mask
+    b, s = q.shape[0], q.shape[1]
+    nh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qh = q.reshape(b, s, nh, hd)
+    kh = k.reshape(b, s, kvh, hd)
+    vh = v.reshape(b, s, kvh, hd)
+    pos = jnp.arange(s)
+    mask = causal_window_mask(pos, pos, None)
+    return _sdpa(qh, kh, vh, mask).reshape(b, s, nh * hd)
+
+
+def _hybrid_layer(g, cfg, x, b, s, tag, pl, window):
+    """Hymba: attention and mamba heads in PARALLEL — the paper's Fig. 3
+    compute∥memory overlap case (attn = MXU-bound, SSM scan = HBM-bound)."""
+    d, hd, nh, kvh = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    di = cfg.ssm.expand * d
+    n1 = g.add(f"{tag}.norm1", OpKind.NORM, [x], cost=norm_cost(b * s * d))
+    q = g.add(f"{tag}.wq", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, nh * hd),
+              fuse_sig=("gemm", d, nh * hd))
+    k = g.add(f"{tag}.wk", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, kvh * hd),
+              fuse_sig=("gemm", d, kvh * hd))
+    v = g.add(f"{tag}.wv", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, kvh * hd),
+              fuse_sig=("gemm", d, kvh * hd))
+    att = g.add(f"{tag}.attn", OpKind.ATTENTION, [q, k, v],
+                cost=attention_cost(b, s, min(s, window), nh, hd, kvh))
+    # parallel mamba branch
+    inp = g.add(f"{tag}.mamba_in", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, 2 * di))
+    conv = g.add(f"{tag}.mamba_conv", OpKind.ELEMENTWISE, [inp],
+                 cost=elementwise_cost(b * s * di, n_in=1, flops_per_elem=8))
+    scan = g.add(f"{tag}.mamba_scan", OpKind.SCAN, [conv],
+                 cost=scan_cost(b, s, di, cfg.ssm.state_dim))
+    mo = g.add(f"{tag}.mamba_out", OpKind.GEMM, [scan], cost=gemm_cost(b * s, di, d))
+    o = g.add(f"{tag}.wo", OpKind.GEMM, [att], cost=gemm_cost(b * s, nh * hd, d))
+    mix = g.add(f"{tag}.head_mix", OpKind.ELEMENTWISE, [o, mo],
+                cost=elementwise_cost(b * s * d, n_in=2))
+    r1 = g.add(f"{tag}.res1", OpKind.ELEMENTWISE, [x, mix],
+               cost=elementwise_cost(b * s * d, n_in=2))
+    n2 = g.add(f"{tag}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * s * d))
+    gate = g.add(f"{tag}.gate", OpKind.GEMM, [n2], cost=gemm_cost(b * s, d, cfg.d_ff),
+                 fuse_sig=("gemm", d, cfg.d_ff))
+    up = g.add(f"{tag}.up", OpKind.GEMM, [n2], cost=gemm_cost(b * s, d, cfg.d_ff),
+               fuse_sig=("gemm", d, cfg.d_ff))
+    glu = g.add(f"{tag}.glu", OpKind.ELEMENTWISE, [gate, up],
+                cost=elementwise_cost(b * s * cfg.d_ff, n_in=2))
+    down = g.add(f"{tag}.down", OpKind.GEMM, [glu], cost=gemm_cost(b * s, cfg.d_ff, d))
+    return g.add(f"{tag}.res2", OpKind.ELEMENTWISE, [r1, down],
+                 cost=elementwise_cost(b * s * d, n_in=2))
+
+
+def build_encdec_opgraph(cfg: ModelConfig, batch: int, dec_seq: int,
+                         n_layers: int | None = None) -> OpGraph:
+    """Whisper/T5-style encoder-decoder DAG: the encoder chain and the
+    decoder's cross-attention KV projections are parallel branches until the
+    first cross-attend — the operator-diversity case the paper highlights
+    for T5 (Fig. 7a)."""
+    g = OpGraph(cfg.name)
+    d, nh, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = batch
+    fe = cfg.frontend
+    L = n_layers if n_layers is not None else cfg.n_layers
+    Ld = n_layers if n_layers is not None else (cfg.n_dec_layers or cfg.n_layers)
+    es = fe.n_tokens if fe else 1500
+
+    frames = g.add("frames", OpKind.INPUT, out_shape=(b, es, fe.feat_dim if fe else d))
+    enc = g.add("frontend_proj", OpKind.GEMM, [frames],
+                cost=gemm_cost(b * es, fe.feat_dim if fe else d, d))
+    for l in range(L):
+        n1 = g.add(f"e{l}.norm1", OpKind.NORM, [enc], cost=norm_cost(b * es * d))
+        q = g.add(f"e{l}.wq", OpKind.GEMM, [n1], cost=gemm_cost(b * es, d, nh * hd),
+                  fuse_sig=("gemm", d, nh * hd))
+        k = g.add(f"e{l}.wk", OpKind.GEMM, [n1], cost=gemm_cost(b * es, d, kvh * hd),
+                  fuse_sig=("gemm", d, kvh * hd))
+        v = g.add(f"e{l}.wv", OpKind.GEMM, [n1], cost=gemm_cost(b * es, d, kvh * hd),
+                  fuse_sig=("gemm", d, kvh * hd))
+        att = g.add(f"e{l}.attn", OpKind.ATTENTION, [q, k, v],
+                    cost=attention_cost(b, es, es, nh, hd, kvh))
+        o = g.add(f"e{l}.wo", OpKind.GEMM, [att], cost=gemm_cost(b * es, nh * hd, d))
+        r1 = g.add(f"e{l}.res1", OpKind.ELEMENTWISE, [enc, o],
+                   cost=elementwise_cost(b * es * d, n_in=2))
+        n2 = g.add(f"e{l}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * es * d))
+        up = g.add(f"e{l}.up", OpKind.GEMM, [n2], cost=gemm_cost(b * es, d, cfg.d_ff))
+        dn = g.add(f"e{l}.down", OpKind.GEMM, [up], cost=gemm_cost(b * es, cfg.d_ff, d))
+        enc = g.add(f"e{l}.res2", OpKind.ELEMENTWISE, [r1, dn],
+                    cost=elementwise_cost(b * es * d, n_in=2))
+
+    tokens = g.add("tokens", OpKind.INPUT, out_shape=(b, dec_seq))
+    dec = g.add("dec_embed", OpKind.GATHER, [tokens], cost=gather_cost(b * dec_seq, d))
+    s = dec_seq
+    for l in range(Ld):
+        n1 = g.add(f"d{l}.norm1", OpKind.NORM, [dec], cost=norm_cost(b * s * d))
+        q = g.add(f"d{l}.wq", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, nh * hd),
+                  fuse_sig=("gemm", d, nh * hd))
+        k = g.add(f"d{l}.wk", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, kvh * hd),
+                  fuse_sig=("gemm", d, kvh * hd))
+        v = g.add(f"d{l}.wv", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, kvh * hd),
+                  fuse_sig=("gemm", d, kvh * hd))
+        att = g.add(f"d{l}.self", OpKind.ATTENTION, [q, k, v],
+                    cost=attention_cost(b, s, s, nh, hd, kvh))
+        # cross-attn K/V from the encoder: parallel with decoder self-attn
+        ck = g.add(f"d{l}.cross_k", OpKind.GEMM, [enc],
+                   cost=gemm_cost(b * es, d, kvh * hd), fuse_sig=("gemm", d, kvh * hd))
+        cv = g.add(f"d{l}.cross_v", OpKind.GEMM, [enc],
+                   cost=gemm_cost(b * es, d, kvh * hd), fuse_sig=("gemm", d, kvh * hd))
+        cq = g.add(f"d{l}.cross_q", OpKind.GEMM, [att],
+                   cost=gemm_cost(b * s, d, nh * hd))
+        xat = g.add(f"d{l}.cross", OpKind.ATTENTION, [cq, ck, cv],
+                    cost=attention_cost(b, s, es, nh, hd, kvh))
+        o = g.add(f"d{l}.wo", OpKind.GEMM, [xat], cost=gemm_cost(b * s, nh * hd, d))
+        r1 = g.add(f"d{l}.res1", OpKind.ELEMENTWISE, [dec, o],
+                   cost=elementwise_cost(b * s * d, n_in=2))
+        n2 = g.add(f"d{l}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * s * d))
+        up = g.add(f"d{l}.up", OpKind.GEMM, [n2], cost=gemm_cost(b * s, d, cfg.d_ff))
+        dn = g.add(f"d{l}.down", OpKind.GEMM, [up], cost=gemm_cost(b * s, cfg.d_ff, d))
+        dec = g.add(f"d{l}.res2", OpKind.ELEMENTWISE, [r1, dn],
+                    cost=elementwise_cost(b * s * d, n_in=2))
+    g.add("logits", OpKind.GEMM, [dec], cost=gemm_cost(b * s, d, cfg.vocab_size))
+    g.validate()
+    return g
+
+
+def _rwkv_layer(g, cfg, x, b, s, tag, pl):
+    """RWKV6: five parallel token-shift projections feeding the WKV scan."""
+    d = cfg.d_model
+    hs = cfg.ssm.head_dim if cfg.ssm else 64
+    n1 = g.add(f"{tag}.norm1", OpKind.NORM, [x], cost=norm_cost(b * s * d))
+    projs = []
+    for nm in ("r", "k", "v", "g"):
+        projs.append(g.add(f"{tag}.w{nm}", OpKind.GEMM, [n1],
+                           cost=gemm_cost(b * s, d, d), fuse_sig=("gemm", d, d)))
+    wdec = g.add(f"{tag}.w_lora", OpKind.GEMM, [n1], cost=gemm_cost(b * s, d, 64))
+    scan = g.add(f"{tag}.wkv_scan", OpKind.SCAN, projs[:3] + [wdec],
+                 cost=scan_cost(b, s, d, hs))
+    gated = g.add(f"{tag}.gate_mul", OpKind.ELEMENTWISE, [scan, projs[3]],
+                  cost=elementwise_cost(b * s * d, n_in=2))
+    o = g.add(f"{tag}.wo", OpKind.GEMM, [gated], cost=gemm_cost(b * s, d, d))
+    r1 = g.add(f"{tag}.res1", OpKind.ELEMENTWISE, [x, o],
+               cost=elementwise_cost(b * s * d, n_in=2))
+    n2 = g.add(f"{tag}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * s * d))
+    ck = g.add(f"{tag}.cm_k", OpKind.GEMM, [n2], cost=gemm_cost(b * s, d, cfg.d_ff))
+    cv = g.add(f"{tag}.cm_v", OpKind.GEMM, [ck], cost=gemm_cost(b * s, cfg.d_ff, d))
+    return g.add(f"{tag}.res2", OpKind.ELEMENTWISE, [r1, cv],
+                 cost=elementwise_cost(b * s * d, n_in=2))

@@ -1,0 +1,213 @@
+"""State-space / linear-recurrence blocks: RWKV6 (Finch) and a Mamba-style
+selective SSM head (used by Hymba's parallel attn∥SSM layers).
+
+Both expose a *sequence* form (training / prefill: process T tokens, return
+final state) and a *step* form (decode: one token, carry state).  The
+sequence form's inner recurrence is the memory-bound hot loop — the Pallas
+``rwkv6`` kernel implements the chunked WKV recurrence; the pure-jnp path
+here is the oracle.
+
+RWKV6 time-mix (per head, head_size K):
+    wkv_t = diag(u)·(k_tᵀ v_t) + S_{t-1}
+    S_t   = diag(w_t)·S_{t-1} + k_tᵀ v_t          (w_t data-dependent decay)
+    out_t = r_t · wkv_t
+Mamba selective scan (state N):
+    h_t = exp(Δ_t A)·h_{t-1} + Δ_t B_t x_t ;  y_t = C_t h_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..utils import shard
+from .layers import init_linear, linear
+
+
+# =============================== RWKV6 =======================================
+
+def init_rwkv_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hs = cfg.ssm.head_dim if cfg.ssm else 64
+    n_heads = d // hs
+    ks = jax.random.split(key, 10)
+    dt = cfg.dtype
+    lora = 32  # data-dependent decay LoRA rank (Finch §3)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dt),  # token-shift mixes (r,k,v,g,w)
+        "wr": init_linear(ks[1], d, d, False, dt),
+        "wk": init_linear(ks[2], d, d, False, dt),
+        "wv": init_linear(ks[3], d, d, False, dt),
+        "wg": init_linear(ks[4], d, d, False, dt),
+        "wo": init_linear(ks[5], d, d, False, dt),
+        # decay: w_t = exp(-exp(base + lora(x)))
+        "w_base": jnp.zeros((d,), jnp.float32) - 6.0,
+        "w_lora_a": init_linear(ks[6], d, lora, False, dt),
+        "w_lora_b": init_linear(ks[7], lora, d, False, dt),
+        "u": (jax.random.normal(ks[8], (n_heads, hs), jnp.float32) * 0.1).astype(jnp.float32),
+        "ln_x": {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)},
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: [B,T,d]; returns x shifted right by one, first slot = x_prev [B,d]."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _rwkv_proj(p, x, x_prev):
+    """The 5 parallel token-shift projections (r,k,v,g,w) — the branchy
+    sub-DAG Opara fuses into one wave (DESIGN.md §5)."""
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    mix = [x + (xs - x) * mu[i] for i in range(5)]
+    r = linear(p["wr"], mix[0])
+    k = linear(p["wk"], mix[1])
+    v = linear(p["wv"], mix[2])
+    g = jax.nn.silu(linear(p["wg"], mix[3]))
+    w_log = p["w_base"] + linear(p["w_lora_b"],
+                                 jnp.tanh(linear(p["w_lora_a"], mix[4]))).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                        # decay in (0,1)
+    return r, k, v, g, w
+
+
+def rwkv_time_mix_seq(p, x, state, cfg: ModelConfig, use_kernels: bool = False):
+    """x: [B,T,d]; state: (x_prev [B,d], S [B,H,K,K] fp32).  Returns (y, state')."""
+    b, t, d = x.shape
+    hs = cfg.ssm.head_dim if cfg.ssm else 64
+    h = d // hs
+    x_prev, s0 = state
+    r, k, v, g, w = _rwkv_proj(p, x, x_prev)
+    rh = r.reshape(b, t, h, hs).astype(jnp.float32)
+    kh = k.reshape(b, t, h, hs).astype(jnp.float32)
+    vh = v.reshape(b, t, h, hs).astype(jnp.float32)
+    wh = w.reshape(b, t, h, hs)
+    u = p["u"]
+
+    if use_kernels:
+        from ..kernels.rwkv6.ops import rwkv6_tpu_or_ref
+        y, s_final = rwkv6_tpu_or_ref(rh, kh, vh, wh, u, s0)
+    else:
+        def step(S, rkvw):
+            rt, kt, vt, wt = rkvw                        # [B,H,K] each
+            kv = kt[..., :, None] * vt[..., None, :]     # [B,H,K,K]
+            out = jnp.einsum("bhk,bhkj->bhj", rt, u[None, :, :, None] * kv + S)
+            S = wt[..., :, None] * S + kv
+            return S, out
+        xs_t = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+                jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0))
+        s_final, outs = jax.lax.scan(step, s0, xs_t)
+        y = jnp.moveaxis(outs, 0, 1)                     # [B,T,H,K]
+
+    y = y.reshape(b, t, d).astype(x.dtype)
+    # group-norm over heads (ln_x in RWKV), then gate and output proj
+    yf = y.astype(jnp.float32).reshape(b, t, h, hs)
+    mu_ = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu_) * jax.lax.rsqrt(var + 1e-5)
+    y = (yf.reshape(b, t, d) * p["ln_x"]["scale"].astype(jnp.float32)
+         + p["ln_x"]["bias"].astype(jnp.float32)).astype(x.dtype)
+    y = linear(p["wo"], y * g)
+    return shard(y, "batch", "seq", "embed"), (x[:, -1], s_final)
+
+
+def rwkv_time_mix_step(p, x, state, cfg: ModelConfig):
+    """Decode: x [B,1,d]."""
+    y, st = rwkv_time_mix_seq(p, x, state, cfg, use_kernels=False)
+    return y, st
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, d), jnp.float32)).astype(dt),
+        "wk": init_linear(ks[1], d, dff, False, dt),
+        "wv": init_linear(ks[2], dff, d, False, dt),
+    }
+
+
+def rwkv_channel_mix(p, x, x_prev, cfg: ModelConfig):
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    k = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
+    return linear(p["wv"], k), x[:, -1]
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hs = cfg.ssm.head_dim if cfg.ssm else 64
+    h = d // hs
+    return {
+        "tm_x": jnp.zeros((batch, d), cfg.dtype),
+        "tm_s": jnp.zeros((batch, h, hs, hs), jnp.float32),
+        "cm_x": jnp.zeros((batch, d), cfg.dtype),
+    }
+
+
+# =============================== Mamba head ==================================
+
+def init_mamba(key, cfg: ModelConfig):
+    """Selective SSM head for Hymba (runs in parallel with attention)."""
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    ks = jax.random.split(key, 6)
+    dt = cfg.dtype
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, False, dt),     # x, z
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, di), jnp.float32) * 0.2).astype(dt),
+        "x_proj": init_linear(ks[2], di, s.state_dim * 2 + 1, False, dt),  # B, C, dt
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[3], di, d, False, dt),
+    }
+
+
+def _mamba_conv_seq(w, x, conv_state):
+    """Causal depthwise conv over time. x: [B,T,di]; conv_state: [B,K-1,di]."""
+    k = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)    # [B,T+K-1,di]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def mamba_seq(p, x, state, cfg: ModelConfig, use_kernels: bool = False):
+    """x: [B,T,d]; state: (conv_state [B,K-1,di], h [B,di,N] fp32)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = s.expand * d
+    conv_state, h0 = state
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _mamba_conv_seq(p["conv_w"], xi, conv_state)
+    bcd = linear(p["x_proj"], xi)
+    bmat, cmat, dt_raw = jnp.split(bcd, [s.state_dim, 2 * s.state_dim], axis=-1)
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32)) + 1e-4         # [B,T,1]
+    a = -jnp.exp(p["a_log"])                                           # [di,N]
+
+    # discretize inside the scan body (never materialize [B,T,di,N]):
+    # h_t = exp(delta_t·a) h_{t-1} + (delta_t·x_t)⊗B_t ;  y_t = C_t·h_t
+    def step(h, inp):
+        delta_t, x_t, b_t, c_t = inp                    # [B,1],[B,di],[B,N],[B,N]
+        da_t = jnp.exp(delta_t[..., None] * a[None])    # [B,di,N]
+        h = da_t * h + (delta_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(xi.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cmat.astype(jnp.float32), 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xi.astype(jnp.float32) * p["d_skip"][None, None]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = linear(p["out_proj"], y)
+    return shard(out, "batch", "seq", "embed"), (conv_state, h_final)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return (jnp.zeros((batch, s.conv_dim - 1, di), cfg.dtype),
+            jnp.zeros((batch, di, s.state_dim), jnp.float32))

@@ -1,0 +1,7 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedule import cosine_schedule, wsd_schedule
+from .compression import compress_grads, init_compression, CompressionState
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "cosine_schedule", "wsd_schedule",
+           "compress_grads", "init_compression", "CompressionState"]

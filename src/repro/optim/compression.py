@@ -1,0 +1,66 @@
+"""Gradient compression with error feedback (cross-pod bandwidth saver).
+
+Modes (ParallelConfig.grad_compression):
+  * "int8" — per-tensor int8 quantization before the dp all-reduce
+    (4× traffic), residual carried to the next step;
+  * "topk" — Deep Gradient Compression-style magnitude sparsification
+    with momentum-free error feedback.
+
+The all-reduce itself happens via GSPMD (sharded grads); these hooks
+transform the gradient pytree inside the train step and keep the error
+state alongside the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any   # residual pytree (fp32), zeros when compression off
+
+
+def init_compression(params, mode: str) -> CompressionState:
+    if mode == "none":
+        return CompressionState(error=None)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return CompressionState(error=jax.tree_util.tree_map(zeros, params))
+
+
+def _int8_roundtrip(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    return q * scale
+
+
+def _topk_mask(g, k_frac: float = 0.01):
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, int(flat.size * k_frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_grads(grads, state: CompressionState, mode: str):
+    """Returns (compressed_grads, new_state).  Error feedback: the part of
+    the gradient destroyed by compression is added back next step."""
+    if mode == "none" or state.error is None:
+        return grads, state
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if mode == "int8":
+            sent = _int8_roundtrip(gf)
+        elif mode == "topk":
+            sent = _topk_mask(gf)
+        else:
+            raise ValueError(f"unknown compression mode {mode}")
+        return sent.astype(g.dtype), gf - sent
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_e = treedef.unflatten([o[1] for o in out])
+    return new_g, CompressionState(error=new_e)

@@ -1,0 +1,24 @@
+"""LR schedules: cosine w/ warmup, and WSD (warmup-stable-decay — MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, base_lr: float, warmup: int, stable: int, decay: int,
+                 min_ratio: float = 0.01):
+    """MiniCPM's warmup-stable-decay: linear warmup, flat, exp decay tail."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    in_decay = step > (warmup + stable)
+    t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    dec = base_lr * (min_ratio ** t)
+    return jnp.where(step < warmup, warm, jnp.where(in_decay, dec, base_lr))

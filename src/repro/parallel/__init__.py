@@ -1,0 +1,10 @@
+from .sharding import (
+    activation_rules,
+    batch_specs,
+    cache_specs,
+    param_shardings,
+    safe_spec,
+)
+
+__all__ = ["activation_rules", "batch_specs", "cache_specs",
+           "param_shardings", "safe_spec"]

@@ -1,0 +1,215 @@
+"""Sharding rule engine: FSDP × TP × EP × SP over the production mesh.
+
+Strategy (DESIGN.md §6):
+  * params — TP (Megatron column/row split) over ``model``; FSDP (ZeRO-3)
+    over the data-parallel axes on the non-TP dim; experts over ``model``
+    (EP).  Rules match on the parameter's path suffix; any sharding whose
+    dimension does not divide the axis size is dropped (``safe_spec``).
+  * activations — logical-axis rules consumed by ``repro.utils.shard``:
+    batch→dp, heads/kv_heads/mlp/expert/vocab→model, seq→data only in the
+    long-context (batch=1) decode cells (sequence parallelism).
+  * KV caches — batch→dp when divisible, kv-heads→model when divisible,
+    sequence→data for batch=1 cells.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeCell
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def safe_spec(mesh: Mesh, shape: tuple[int, ...], *axes) -> P:
+    """PartitionSpec that drops any axis not dividing its dimension."""
+    out = []
+    used: set[str] = set()
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            out.append(None)
+            continue
+        ax_t = (ax,) if isinstance(ax, str) else tuple(ax)
+        ax_t = tuple(a for a in ax_t if a in mesh.shape and a not in used)
+        if ax_t and dim % _axis_size(mesh, ax_t) == 0:
+            out.append(ax_t if len(ax_t) > 1 else ax_t[0])
+            used.update(ax_t)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# -- parameter rules ----------------------------------------------------------
+# (path-suffix regex, role); roles resolved per-shape below.
+_PARAM_RULES: list[tuple[str, str]] = [
+    (r"experts.*gate|experts.*up", "expert_in"),     # [E, d, f]
+    (r"experts.*down", "expert_out"),                # [E, f, d]
+    (r"embed.*table|head.*table", "embedding"),      # [V, d]
+    (r"(wq_b|wk_b|wv_b)", "col"),                    # MLA up-proj [r, H*dh]
+    (r"(wq_a|wkv_a)", "vec_in"),                     # MLA down-proj [d, r]
+    (r"attn.*wo|out_proj|cm_v|time_mix.*wo", "row"),  # [model_dim, d]
+    (r"(wq|wk|wv|wg|wr|gate|up|in_proj|cm_k|frontend|proj1|proj2)", "col"),
+    (r"(w_lora_a|w_lora_b|x_proj|router|conv_w|mtp.*proj)", "vec_in"),
+    (r"down", "row"),
+]
+
+
+def _spec_for(mesh: Mesh, path: str, shape: tuple[int, ...], dp, tp) -> P:
+    ndim = len(shape)
+    role = None
+    for pat, r in _PARAM_RULES:
+        if re.search(pat, path):
+            role = r
+            break
+    # strip leading layer-stack dims: rules describe the trailing dims.
+    def lead(n: int) -> list:
+        return [None] * (ndim - n)
+
+    if role == "expert_in" and ndim >= 3:
+        return safe_spec(mesh, shape, *lead(3), tp, dp, None)
+    if role == "expert_out" and ndim >= 3:
+        return safe_spec(mesh, shape, *lead(3), tp, None, dp)
+    if role == "embedding" and ndim >= 2:
+        return safe_spec(mesh, shape, *lead(2), tp, dp)
+    if role == "col" and ndim >= 2:
+        return safe_spec(mesh, shape, *lead(2), dp, tp)
+    if role == "row" and ndim >= 2:
+        return safe_spec(mesh, shape, *lead(2), tp, dp)
+    if role == "vec_in" and ndim >= 2:
+        return safe_spec(mesh, shape, *lead(2), dp, None)
+    if ndim >= 2:
+        return safe_spec(mesh, shape, *lead(2), None, dp)
+    return P(*([None] * ndim))
+
+
+def param_shardings(mesh: Mesh, params_shapes: Any, fsdp: bool = True,
+                    tensor_parallel: bool = True,
+                    expert_2d: bool = False) -> Any:
+    """NamedSharding pytree for a params ShapeDtypeStruct pytree.
+
+    ``expert_2d`` (§Perf): shard the expert axis over data×model jointly —
+    each chip owns whole experts, so expert weights are never gathered;
+    tokens move via all-to-all instead (the EP-for-decode layout)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape) if fsdp else None
+    tp = "model" if tensor_parallel else None
+    ep = (tuple(a for a in ("pod", "data") if a in mesh.shape) + ("model",)
+          if expert_2d else tp)
+
+    def assign(path, leaf):
+        p = jax.tree_util.keystr(path)
+        if expert_2d and re.search(r"experts", p):
+            nd = len(leaf.shape)
+            lead = [None] * (nd - 3)
+            spec = safe_spec(mesh, leaf.shape, *lead, ep, None, None)
+            return NamedSharding(mesh, spec)
+        spec = _spec_for(mesh, p, leaf.shape, dp, tp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+# -- activation logical rules --------------------------------------------------
+
+def activation_rules(mesh: Mesh, cell: ShapeCell | None = None,
+                     tensor_parallel: bool = True,
+                     sequence_parallel: bool = False,
+                     expert_2d: bool = False) -> dict[str, Any]:
+    """Logical-axis → mesh-axis mapping for ``repro.utils.shard``.
+
+    ``tensor_parallel=False`` (§Perf: tiny models on big meshes) drops every
+    model-axis activation constraint — combined with TP-free param
+    shardings this removes per-layer activation exchanges entirely.
+    ``sequence_parallel`` = Megatron-SP: the residual stream's seq axis
+    shards over `model` between attention/MLP regions.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    long_ctx = cell is not None and cell.global_batch < _axis_size(mesh, dp)
+    tp = "model" if tensor_parallel else None
+    # with TP off the model axis is idle for activations — fold it into the
+    # batch axes (pure-DP over the whole mesh) so per-device activations and
+    # logits shrink by the TP degree.
+    batch_axes = dp if tensor_parallel else dp + ("model",)
+    seq = dp if long_ctx else ("model" if (sequence_parallel and tensor_parallel)
+                               else None)
+    return {
+        "batch": None if long_ctx else batch_axes,
+        "seq": seq,
+        "embed": None,
+        "heads": tp,
+        "kv_heads": tp,
+        "mlp": tp,
+        "expert": (dp + ("model",)) if expert_2d else tp,
+        "vocab": tp,
+    }
+
+
+# -- input/cache specs ---------------------------------------------------------
+
+def batch_specs(mesh: Mesh, cfg: ModelConfig, inputs: dict[str, jax.ShapeDtypeStruct],
+                cell: ShapeCell, tensor_parallel: bool = True) -> dict[str, NamedSharding]:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not tensor_parallel:
+        dp = dp + ("model",)
+    seq_parallel = cell.global_batch < _axis_size(mesh, dp)
+    out = {}
+    for name, sds in inputs.items():
+        nd = len(sds.shape)
+        if seq_parallel and nd >= 2:
+            # batch=1 long-context: shard the sequence axis instead (SP)
+            axes = [None, dp] + [None] * (nd - 2)
+        elif seq_parallel:
+            axes = [None] * nd
+        else:
+            axes = [dp] + [None] * (nd - 1)
+        out[name] = NamedSharding(mesh, safe_spec(mesh, sds.shape, *axes))
+    return out
+
+
+def cache_specs(mesh: Mesh, cfg: ModelConfig, caches_shapes: Any,
+                cell: ShapeCell) -> Any:
+    """Shardings for decode caches.
+
+    KV tensors [L, B, S, KVH, D] (GQA) / [L, B, S, R] (MLA) / states.
+    batch→dp when divisible; kv_heads→model when divisible; for batch=1
+    long-context cells the sequence axis shards over data (SP decode).
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    seq_parallel = cell.global_batch < _axis_size(mesh, dp)
+
+    cache_seq = cell.seq_len + cfg.meta_tokens
+
+    def assign(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 3 and shape[2] == cache_seq:
+            # quantization scales [L, B, T]
+            return NamedSharding(mesh, safe_spec(
+                mesh, shape, None, None if seq_parallel else dp,
+                dp if seq_parallel else None))
+        if nd >= 4 and shape[2] == cache_seq:
+            # KV cache [L, B, S, KVH, D] (GQA) or [L, B, S, R] (MLA)
+            axes: list = [None,
+                          None if seq_parallel else dp,
+                          dp if seq_parallel else None]
+            axes += (["model", None] if nd == 5 else [None] * (nd - 3))
+            return NamedSharding(mesh, safe_spec(mesh, shape, *axes))
+        # states / misc [L, B, feat...]: batch over dp, first feature → model
+        axes = [None, None if seq_parallel else dp] + [None] * (nd - 2)
+        if nd >= 3:
+            axes[2] = "model"
+        return NamedSharding(mesh, safe_spec(mesh, shape, *axes))
+
+    return jax.tree_util.tree_map(assign, caches_shapes)

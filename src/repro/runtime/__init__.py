@@ -1,0 +1,9 @@
+from .fault_tolerance import (
+    ElasticController,
+    FailureDetector,
+    HeartbeatMonitor,
+    StragglerDetector,
+)
+
+__all__ = ["ElasticController", "FailureDetector", "HeartbeatMonitor",
+           "StragglerDetector"]

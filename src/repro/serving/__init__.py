@@ -1,0 +1,4 @@
+from .engine import InferenceEngine, Request, RequestState
+from .sampler import sample_token
+
+__all__ = ["InferenceEngine", "Request", "RequestState", "sample_token"]

@@ -1,0 +1,145 @@
+"""Continuous-batching inference engine.
+
+vLLM-style slot scheduler shrunk to the essentials, built on the Model
+facade's prefill/decode step functions (which are exactly what the dry-run
+lowers at production scale):
+
+  * fixed pool of decode slots sharing one stacked KV cache;
+  * prefill admission when a slot frees (prefill and decode interleave —
+    one engine tick is either one prefill or one batched decode step);
+  * per-request sampling params; EOS / max-token completion;
+  * deterministic given (seed, arrival order).
+
+Batched decode across slots is itself operator parallelism — every slot's
+decode operators fuse into one wave, so the engine's throughput benefits
+from the same horizontal batching Opara applies inside a graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import Model
+from .sampler import sample_token
+
+
+class RequestState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: int | None = None
+    state: RequestState = RequestState.PENDING
+    output: list[int] = dataclasses.field(default_factory=list)
+
+
+class InferenceEngine:
+    def __init__(self, model: Model, params, max_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.cfg: ModelConfig = model.cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.rng = jax.random.key(seed)
+        self.queue: list[Request] = []
+        self.slots: list[Request | None] = [None] * max_slots
+        self.pos = np.zeros(max_slots, np.int32)
+        self.last_token = np.zeros(max_slots, np.int32)
+        from ..models.transformer import init_decode_caches
+        cache_len = max_len + self.cfg.meta_tokens
+        self.caches = init_decode_caches(self.cfg, max_slots, cache_len)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode(p, t, c, pos))
+
+    # -- API ---------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            done.extend(self.step())
+        return done
+
+    # -- one tick -----------------------------------------------------------------
+    def step(self) -> list[Request]:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if free and self.queue:
+            return self._admit(free[0], self.queue.pop(0))
+        return self._decode_tick()
+
+    def _admit(self, slot: int, req: Request) -> list[Request]:
+        req.state = RequestState.RUNNING
+        tokens = jnp.asarray([req.prompt], jnp.int32)
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": tokens},
+            cache_len=self.max_len + self.cfg.meta_tokens)
+        self.rng, sub = jax.random.split(self.rng)
+        first = int(sample_token(logits, sub, req.temperature)[0])
+        req.output.append(first)
+        if (req.eos_id is not None and first == req.eos_id) \
+                or len(req.output) >= req.max_tokens:
+            req.state = RequestState.DONE
+            return [req]
+        # splice the single-request cache into the shared slot cache
+        self.caches = jax.tree_util.tree_map(
+            lambda big, small: _splice(big, small, slot), self.caches, cache)
+        self.slots[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.last_token[slot] = first
+        return []
+
+    def _decode_tick(self) -> list[Request]:
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return []
+        token = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.pos)
+        logits, self.caches = self._decode(self.params, self.caches, token, pos)
+        self.rng, sub = jax.random.split(self.rng)
+        finished: list[Request] = []
+        for i in active:
+            req = self.slots[i]
+            t = int(sample_token(logits[i:i + 1], jax.random.fold_in(sub, i),
+                                 req.temperature)[0])
+            req.output.append(t)
+            self.pos[i] += 1
+            self.last_token[i] = t
+            hit_eos = req.eos_id is not None and t == req.eos_id
+            if hit_eos or len(req.output) >= req.max_tokens \
+                    or self.pos[i] >= self.max_len - 1:
+                req.state = RequestState.DONE
+                finished.append(req)
+                self.slots[i] = None
+                self.pos[i] = 0
+                self.last_token[i] = 0
+        return finished
+
+
+def _splice(big, small, slot: int):
+    """Insert a batch-1 cache leaf into the shared cache at `slot`.
+
+    Leaves are [L, B, ...] (stacked per layer); `small` comes from a batch-1
+    prefill whose sequence axis may be shorter than the slot cache (padded
+    by Model.prefill to the engine's max_len).
+    """
+    if big.ndim != small.ndim:
+        raise ValueError(f"cache rank mismatch {big.shape} vs {small.shape}")
+    return jax.lax.dynamic_update_index_in_dim(
+        big, small[:, 0].astype(big.dtype), slot, axis=1)

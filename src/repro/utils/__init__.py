@@ -1,0 +1,5 @@
+from .sharding_ctx import logical_axis_rules, shard, current_rules
+from .tree import tree_size_bytes, tree_param_count
+
+__all__ = ["logical_axis_rules", "shard", "current_rules",
+           "tree_size_bytes", "tree_param_count"]

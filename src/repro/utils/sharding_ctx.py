@@ -1,0 +1,91 @@
+"""Logical-axis sharding constraints (flax-style, dependency-free).
+
+Models annotate activations with *logical* axis names:
+
+    x = shard(x, "batch", "seq", "embed")
+
+Inside a ``logical_axis_rules({...})`` context (entered by the launcher with
+the active mesh), each logical name maps to a mesh axis (or None) and the
+annotation becomes ``jax.lax.with_sharding_constraint``.  Outside any
+context (unit tests, CPU smoke runs) the call is the identity, so model code
+is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> dict[str, str | None] | None:
+    return getattr(_state, "rules", None)
+
+
+def _current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: Mapping[str, str | Sequence[str] | None], mesh=None):
+    prev_r = getattr(_state, "rules", None)
+    prev_m = getattr(_state, "mesh", None)
+    _state.rules = dict(rules)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev_r
+        _state.mesh = prev_m
+
+
+def logical_to_spec(axes: Sequence[str | None], rules: Mapping[str, object]) -> P:
+    spec = []
+    used: set[str] = set()
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        if isinstance(m, (list, tuple)):
+            m = tuple(x for x in m if x not in used)
+            used.update(m)
+            spec.append(m if m else None)
+        else:
+            if m in used:
+                m = None
+            if m is not None:
+                used.add(m)
+            spec.append(m)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *axes: str | None):
+    """Annotate ``x`` with logical axes; no-op without active rules.
+
+    Axes whose dimension does not divide the target mesh-axis size are
+    dropped (partial GSPMD shardings trigger involuntary remat copies).
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} vs {len(axes)} logical axes")
+    spec = logical_to_spec(axes, rules)
+    mesh = _current_mesh()
+    if mesh is not None:
+        sizes = dict(mesh.shape)
+        cleaned = []
+        for dim, entry in zip(x.shape, spec):
+            ax = (entry,) if isinstance(entry, str) else entry
+            if ax is None:
+                cleaned.append(None)
+                continue
+            total = 1
+            for a in ax:
+                total *= sizes.get(a, 1)
+            cleaned.append(entry if dim % total == 0 else None)
+        spec = P(*cleaned)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,21 @@
+"""Pytree helpers."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size_bytes(tree) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * x.dtype.itemsize
+    return total
+
+
+def tree_paths(tree) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(k) for k, _ in flat]

@@ -1,0 +1,70 @@
+"""Shared fixtures + graph builders for the test suite.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device;
+only the dry-run (its own process) forces 512 host devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import OpGraph, OpKind
+from repro.core.profiler import elementwise_cost, gemm_cost, norm_cost
+
+
+def build_inception_like(n_blocks: int = 3, width: int = 4, d: int = 64,
+                         tokens: int = 8, with_payloads: bool = True,
+                         seed: int = 0):
+    """Branchy DAG shaped like the paper's GoogLeNet/Inception motivation."""
+    rng = np.random.default_rng(seed)
+    g = OpGraph("incep")
+    inp = g.add("x", OpKind.INPUT, out_shape=(tokens, d))
+    cur = inp
+    weights = []
+    for blk in range(n_blocks):
+        outs = []
+        for b in range(width):
+            w = jnp.asarray(rng.standard_normal((d, d)) * 0.05, jnp.float32)
+            weights.append(w)
+            # per-branch weight declared via meta["consts"] so the capturer
+            # can stack branches into one fused kernel (capture contract)
+            fn = (lambda x, w: x @ w) if with_payloads else None
+            c = g.add(f"b{blk}_{b}_gemm", OpKind.GEMM, [cur], fn=fn,
+                      cost=gemm_cost(tokens, d, d, 4),
+                      fuse_sig=("gemm", tokens, d, d),
+                      consts=(w,) if with_payloads else ())
+            fn2 = jax.nn.relu if with_payloads else None
+            r = g.add(f"b{blk}_{b}_relu", OpKind.ELEMENTWISE, [c], fn=fn2,
+                      cost=elementwise_cost(tokens * d, 4),
+                      fuse_sig=("relu", tokens, d))
+            outs.append(r)
+        fn3 = (lambda *xs: sum(xs)) if with_payloads else None
+        cur = g.add(f"b{blk}_sum", OpKind.ELEMENTWISE, outs, fn=fn3,
+                    cost=elementwise_cost(tokens * d, 4, n_in=width))
+    g.validate()
+    return g
+
+
+def random_dag(rng: np.random.Generator, n: int, p_edge: float = 0.3,
+               p_heavy: float = 0.3):
+    """Random DAG with mixed compute/memory op costs (no payloads)."""
+    g = OpGraph("rand")
+    ids = []
+    for i in range(n):
+        preds = [j for j in ids if rng.random() < p_edge][-4:]
+        if i == 0:
+            preds = []
+        kind = OpKind.GEMM if rng.random() < p_heavy else OpKind.ELEMENTWISE
+        if kind is OpKind.GEMM:
+            m = int(rng.integers(8, 128))
+            cost = gemm_cost(m, 256, 256, 4)
+        else:
+            cost = elementwise_cost(int(rng.integers(1, 64)) * 1024, 4)
+        ids.append(g.add(f"op{i}", kind, preds, cost=cost))
+    g.validate()
+    return g
+
+
+@pytest.fixture
+def inception_graph():
+    return build_inception_like()

@@ -1,0 +1,79 @@
+"""Fault-tolerance control plane: failure detection, stragglers, elasticity."""
+import pytest
+
+from repro.runtime import (
+    ElasticController,
+    FailureDetector,
+    HeartbeatMonitor,
+    StragglerDetector,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def test_failure_detector_flags_silent_host():
+    clock = FakeClock()
+    mon = HeartbeatMonitor([0, 1, 2], clock)
+    det = FailureDetector(mon, min_timeout=10.0)
+    for _ in range(20):             # everyone beats every second
+        clock.advance(1.0)
+        for h in (0, 1, 2):
+            mon.beat(h)
+        det.observe()
+    assert det.dead_hosts() == []
+    for _ in range(30):             # host 2 goes silent
+        clock.advance(1.0)
+        mon.beat(0)
+        mon.beat(1)
+        det.observe()
+    assert det.dead_hosts() == [2]
+    assert not mon.hosts[2].alive
+
+
+def test_straggler_detection_and_escalation():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(list(range(8)), clock)
+    det = StragglerDetector(k=3.0, min_samples=8)
+    for step in range(16):
+        clock.advance(1.0)
+        for h in range(8):
+            mon.beat(h, step_time=1.0 + (2.5 if h == 7 else 0.0))
+    d1 = det.check(mon)
+    assert d1 == {7: "rebalance"}
+    d2 = det.check(mon)
+    d3 = det.check(mon)
+    assert d3 == {7: "evict"}       # third offence escalates
+
+
+def test_no_straggler_on_uniform_fleet():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(list(range(4)), clock)
+    det = StragglerDetector()
+    for _ in range(10):
+        for h in range(4):
+            mon.beat(h, step_time=1.0)
+    assert det.check(mon) == {}
+
+
+def test_elastic_controller_plans_power_of_two_mesh():
+    ctl = ElasticController(hosts_per_pod=16, model_axis=16)
+    plan = ctl.plan(alive_hosts=list(range(13)), checkpoint_step=1200)
+    assert plan.mesh_shape == (8, 16)         # 13 survivors → 8-row mesh
+    assert len(plan.new_hosts) == 8
+    assert plan.checkpoint_step == 1200
+    assert sorted(plan.data_partition.values()) == list(range(8))
+
+
+def test_elastic_controller_requires_survivors():
+    ctl = ElasticController(16, 16)
+    with pytest.raises(RuntimeError):
+        ctl.plan([], None)

@@ -1,0 +1,62 @@
+"""Hypothesis property sweeps over kernel shape space (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 4),
+       m=st.sampled_from([8, 16, 24]),
+       k=st.sampled_from([128, 256]),
+       f=st.sampled_from([128, 256]),
+       seed=st.integers(0, 100))
+def test_branch_gemm_property(n, m, k, f, seed):
+    from repro.kernels.branch_gemm.ops import branch_gemm
+    from repro.kernels.branch_gemm.ref import branch_gemm_ref
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, m, k)) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.standard_normal((n, k, f)) * 0.1, jnp.float32)
+    np.testing.assert_allclose(np.asarray(branch_gemm(x, w)),
+                               np.asarray(branch_gemm_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([64, 128]),
+       h=st.sampled_from([2, 4]),
+       g=st.sampled_from([1, 2]),
+       d=st.sampled_from([16, 32]),
+       window=st.sampled_from([0, 17, 40]),
+       seed=st.integers(0, 100))
+def test_flash_attention_property(s, h, g, d, window, seed):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    rng = np.random.default_rng(seed)
+    kvh = h // g if h % g == 0 else h
+    q = jnp.asarray(rng.standard_normal((1, kvh * g, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, kvh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, kvh, s, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, bq=32, bk=64)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([128, 256, 384]),
+       kvh=st.sampled_from([1, 2]),
+       d=st.sampled_from([16, 32]),
+       seed=st.integers(0, 100))
+def test_decode_attention_property(t, kvh, d, seed):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((2, kvh * 2, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, kvh, t, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, kvh, t, d)), jnp.float32)
+    lens = rng.integers(1, t, size=2)
+    valid = jnp.asarray(np.arange(t)[None] < lens[:, None])
+    np.testing.assert_allclose(
+        np.asarray(decode_attention(q, k, v, valid, bk=128)),
+        np.asarray(decode_attention_ref(q, k, v, valid)),
+        rtol=2e-3, atol=2e-3)

@@ -1,0 +1,150 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against the ref oracle
+(interpret=True on CPU; same code path targets TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(0)
+
+
+def _rand(shape, dtype, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def _assert_close(a, b, rtol, atol):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------------- branch_gemm
+@pytest.mark.parametrize("n,m,k,f", [(1, 8, 128, 128), (3, 16, 256, 128),
+                                     (4, 32, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_branch_gemm(n, m, k, f, dtype):
+    from repro.kernels.branch_gemm.ops import branch_gemm
+    from repro.kernels.branch_gemm.ref import branch_gemm_ref
+    x = _rand((n, m, k), dtype, 0.1)
+    w = _rand((n, k, f), dtype, 0.1)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    _assert_close(branch_gemm(x, w), branch_gemm_ref(x, w), tol, tol)
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("s,t,h,kvh,d", [(128, 128, 4, 2, 32),
+                                         (256, 256, 4, 4, 64),
+                                         (128, 256, 8, 2, 16)])
+@pytest.mark.parametrize("window", [0, 48])
+def test_flash_attention(s, t, h, kvh, d, window):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = _rand((2, h, s, d), jnp.float32)
+    k = _rand((2, kvh, t, d), jnp.float32)
+    v = _rand((2, kvh, t, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    _assert_close(got, ref, 2e-3, 2e-3)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = _rand((1, 4, 128, 32), jnp.bfloat16)
+    k = _rand((1, 2, 128, 32), jnp.bfloat16)
+    v = _rand((1, 2, 128, 32), jnp.bfloat16)
+    _assert_close(flash_attention(q, k, v, bq=64, bk=64),
+                  flash_attention_ref(q, k, v), 3e-2, 3e-2)
+
+
+# -------------------------------------------------------- decode_attention
+@pytest.mark.parametrize("t,h,kvh,d", [(256, 4, 2, 32), (512, 8, 8, 64),
+                                       (384, 4, 1, 16)])
+def test_decode_attention(t, h, kvh, d):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q = _rand((2, h, d), jnp.float32)
+    k = _rand((2, kvh, t, d), jnp.float32)
+    v = _rand((2, kvh, t, d), jnp.float32)
+    valid = jnp.asarray(np.arange(t)[None] <= np.array([t // 3, t - 1])[:, None])
+    got = decode_attention(q, k, v, valid, bk=128)
+    ref = decode_attention_ref(q, k, v, valid)
+    _assert_close(got, ref, 2e-3, 2e-3)
+
+
+# ------------------------------------------------------------------ rwkv6
+@pytest.mark.parametrize("t,ct", [(32, 8), (64, 16), (24, 8)])
+def test_rwkv6(t, ct):
+    from repro.kernels.rwkv6.ops import rwkv6
+    from repro.kernels.rwkv6.ref import rwkv6_ref
+    b, h, k = 2, 2, 16
+    r, kk, vv = [_rand((b, h, t, k), jnp.float32) for _ in range(3)]
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (b, h, t, k)), jnp.float32)
+    u = _rand((h, k), jnp.float32)
+    s0 = _rand((b, h, k, k), jnp.float32)
+    o1, s1 = rwkv6(r, kk, vv, w, u, s0, ct=ct)
+    o2, s2 = rwkv6_ref(r, kk, vv, w, u, s0)
+    _assert_close(o1, o2, 1e-4, 1e-4)
+    _assert_close(s1, s2, 1e-4, 1e-4)
+
+
+# --------------------------------------------------------------- moe_gemm
+@pytest.mark.parametrize("e,c,d,f", [(2, 8, 128, 128), (4, 16, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gemm(e, c, d, f, dtype):
+    from repro.kernels.moe_gemm.ops import moe_mlp
+    from repro.kernels.moe_gemm.ref import moe_mlp_ref
+    buf = _rand((e, c, d), dtype, 0.1)
+    g = _rand((e, d, f), dtype, 0.05)
+    u = _rand((e, d, f), dtype, 0.05)
+    dn = _rand((e, f, d), dtype, 0.05)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    _assert_close(moe_mlp(buf, g, u, dn, bc=8, bf=128),
+                  moe_mlp_ref(buf, g, u, dn), tol, tol)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("shape", [(16, 128), (2, 8, 256), (32, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    x = _rand(shape, dtype)
+    sc = _rand(shape[-1:], dtype)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    _assert_close(rmsnorm(x, sc), rmsnorm_ref(x, sc), tol, tol)
+
+
+# --------------------------------------- chunked attention (jnp flash twin)
+@pytest.mark.parametrize("s,window", [(96, None), (96, 24), (100, 17)])
+def test_chunked_attention_matches_naive(s, window):
+    from repro.models.attention import _sdpa, causal_window_mask, chunked_attention
+    b, h, kvh, d, dv = 2, 4, 2, 16, 24
+    q = _rand((b, s, h, d), jnp.float32)
+    k = _rand((b, s, kvh, d), jnp.float32)
+    v = _rand((b, s, kvh, dv), jnp.float32)
+    pos = jnp.arange(s)
+    ref = _sdpa(q, k, v, causal_window_mask(pos, pos, window))
+    got = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=32, kv_chunk=16)
+    _assert_close(got, ref, 1e-5, 1e-5)
+
+
+def test_chunked_attention_grads_match_naive():
+    from repro.models.attention import _sdpa, causal_window_mask, chunked_attention
+    b, s, h, kvh, d = 2, 64, 4, 2, 16
+    q = _rand((b, s, h, d), jnp.float32)
+    k = _rand((b, s, kvh, d), jnp.float32)
+    v = _rand((b, s, kvh, d), jnp.float32)
+    pos = jnp.arange(s)
+    w = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+
+    def loss_naive(q, k, v):
+        return (_sdpa(q, k, v, causal_window_mask(pos, pos, None)) * w).sum()
+
+    def loss_chunk(q, k, v):
+        return (chunked_attention(q, k, v, q_chunk=16, kv_chunk=32) * w).sum()
+
+    g1 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        _assert_close(a, b_, 1e-4, 1e-4)

@@ -1,0 +1,75 @@
+"""Unit tests for Algorithm 2 (resource- and interference-aware launcher)."""
+import numpy as np
+
+from repro.core.graph import IntensityClass, OpCost, OpGraph, OpKind
+from repro.core.launch_order import (
+    depth_first_order,
+    opara_launch_order,
+    resource_only_order,
+    topo_order,
+    validate_order,
+)
+from repro.core.profiler import ModelProfiler, V5E
+
+from conftest import build_inception_like
+
+
+def _profiles(g):
+    return ModelProfiler(V5E).profile(g)
+
+
+def test_order_is_topological(inception_graph):
+    profiles = _profiles(inception_graph)
+    for fn in (opara_launch_order, resource_only_order):
+        validate_order(inception_graph, fn(inception_graph, profiles))
+    validate_order(inception_graph, topo_order(inception_graph))
+    validate_order(inception_graph, depth_first_order(inception_graph))
+
+
+def test_smallest_resource_first():
+    """Among simultaneously-ready same-class ops, the least-demand launches
+    first (paper Alg. 2 lines 5-6)."""
+    g = OpGraph()
+    root = g.add("root", OpKind.INPUT)
+    big = g.add("big", OpKind.GEMM, [root],
+                cost=OpCost(flops=1e9, bytes_read=1e6, bytes_written=1e6,
+                            vmem_bytes=64e6))
+    small = g.add("small", OpKind.GEMM, [root],
+                  cost=OpCost(flops=1e9, bytes_read=1e6, bytes_written=1e6,
+                              vmem_bytes=1e6))
+    profiles = _profiles(g)
+    order = opara_launch_order(g, profiles)
+    assert order.index(small) < order.index(big)
+
+
+def test_alternates_memory_and_compute():
+    """Ready lists alternate between memory- and compute-intensive ops
+    (paper Fig. 3 overlap)."""
+    g = OpGraph()
+    root = g.add("root", OpKind.INPUT)
+    comp, mem = [], []
+    for i in range(3):
+        comp.append(g.add(f"c{i}", OpKind.GEMM, [root],
+                          cost=OpCost(flops=1e12, bytes_read=1e6,
+                                      bytes_written=1e6, vmem_bytes=1e6 + i)))
+        mem.append(g.add(f"m{i}", OpKind.ELEMENTWISE, [root],
+                         cost=OpCost(flops=1e3, bytes_read=1e8,
+                                     bytes_written=1e8, vmem_bytes=1e6 + i)))
+    profiles = _profiles(g)
+    classes = [profiles[i].intensity for i in opara_launch_order(g, profiles)]
+    classes = [c for c in classes if c is not None][1:]  # skip the root
+    # no three consecutive ops share a class while both lists are non-empty
+    runs = 1
+    worst = 1
+    for a, b in zip(classes, classes[1:]):
+        runs = runs + 1 if a == b else 1
+        worst = max(worst, runs)
+    assert worst <= 2
+
+
+def test_root_classification():
+    prof = ModelProfiler(V5E)
+    gemm = OpCost(flops=4e12, bytes_read=1e9, bytes_written=1e9)
+    ew = OpCost(flops=1e6, bytes_read=1e9, bytes_written=1e9)
+    assert gemm.intensity(V5E.machine_balance) is IntensityClass.COMPUTE
+    assert ew.intensity(V5E.machine_balance) is IntensityClass.MEMORY

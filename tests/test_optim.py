@@ -1,0 +1,70 @@
+"""Optimizer, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    compress_grads,
+    cosine_schedule,
+    init_compression,
+    wsd_schedule,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    target = jnp.asarray([3.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: ((p["w"] - target) ** 2).sum())(params)
+        params, state, _ = adamw_update(g, state, params, lr=0.05,
+                                        weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    new_params, state, metrics = adamw_update(huge, state, params, lr=0.1,
+                                              clip_norm=1.0, weight_decay=0.0)
+    assert float(metrics["grad_norm"]) > 1e8
+    assert float(jnp.abs(new_params["w"]).max()) < 1.0
+
+
+def test_schedules_shape():
+    lrs = [float(cosine_schedule(s, 1e-3, warmup=10, total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9           # warmup ascends
+    assert lrs[-1] < lrs[20]                        # cosine descends
+    w = [float(wsd_schedule(s, 1e-3, 10, 50, 20)) for s in range(90)]
+    assert abs(w[30] - 1e-3) < 1e-9                 # stable plateau
+    assert w[-1] < w[30]                            # decay tail
+
+
+def test_int8_compression_error_feedback():
+    """Error feedback: sum of transmitted grads converges to the true sum."""
+    params = {"w": jnp.zeros(64)}
+    state = init_compression(params, "int8")
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(64)
+    sent_sum = np.zeros(64)
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.standard_normal(64) * 0.1, jnp.float32)}
+        true_sum += np.asarray(g["w"])
+        sent, state = compress_grads(g, state, "int8")
+        sent_sum += np.asarray(sent["w"], np.float32)
+    resid = np.abs(true_sum - sent_sum).max()
+    assert resid < 0.05, f"error feedback residual too large: {resid}"
+
+
+def test_topk_compression_sparsity():
+    params = {"w": jnp.zeros(1000)}
+    state = init_compression(params, "topk")
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                          jnp.float32)}
+    sent, state = compress_grads(g, state, "topk")
+    nnz = int((np.asarray(sent["w"]) != 0).sum())
+    assert nnz <= 20  # k_frac=0.01 of 1000 + ties

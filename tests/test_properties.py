@@ -1,0 +1,86 @@
+"""Hypothesis property tests over the scheduling system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SimConfig,
+    allocate_streams,
+    allocate_streams_nimble,
+    build_waves,
+    count_syncs,
+    schedule,
+    sequential_makespan,
+    simulate_plan,
+)
+from repro.core.launch_order import ORDER_POLICIES, validate_order
+from repro.core.profiler import ModelProfiler, V5E
+from repro.core.stream_alloc import validate_plan
+
+from conftest import random_dag
+
+
+dag_strategy = st.builds(
+    lambda seed, n, p: random_dag(np.random.default_rng(seed), n, p),
+    st.integers(0, 10_000), st.integers(1, 40),
+    st.floats(0.05, 0.9),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(dag_strategy)
+def test_stream_plans_valid(g):
+    for alloc in (allocate_streams, allocate_streams_nimble):
+        plan = alloc(g)
+        validate_plan(g, plan)
+
+
+@settings(max_examples=60, deadline=None)
+@given(dag_strategy, st.sampled_from(list(ORDER_POLICIES)))
+def test_orders_topological(g, policy):
+    profiles = ModelProfiler(V5E).profile(g)
+    validate_order(g, ORDER_POLICIES[policy](g, profiles))
+
+
+@settings(max_examples=40, deadline=None)
+@given(dag_strategy)
+def test_waves_partition_and_respect_deps(g):
+    plan = schedule(g, "opara", "opara")
+    seen = [op for w in plan.waves.waves for op in w.op_ids]
+    assert sorted(seen) == sorted(g.nodes)
+    wave_of = {op: w.index for w in plan.waves.waves for op in w.op_ids}
+    for node in g:
+        for p in node.inputs:
+            assert wave_of[p] < wave_of[node.op_id]
+    # ops in the same wave are mutually independent (no edges within a wave)
+    for w in plan.waves.waves:
+        ops = set(w.op_ids)
+        for op in w.op_ids:
+            assert not (set(g.nodes[op].inputs) & ops)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dag_strategy)
+def test_simulated_makespan_bounds(g):
+    plan = schedule(g, "opara", "opara")
+    cfg = SimConfig(sync_us=0.0, interference_penalty=0.0)
+    res = simulate_plan(plan, cfg)
+    seq = sequential_makespan(g, plan.profiles, cfg)
+    durations = {i: plan.profiles[i].est_us for i in g.nodes}
+    assert res.makespan_us <= seq * (1 + 1e-9) + 1e-6
+    assert res.makespan_us >= g.critical_path_cost(durations) - 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(dag_strategy)
+def test_nimble_never_more_streams_than_opara(g):
+    """Nimble computes a MINIMUM path cover; Opara trades stream count for
+    fewer syncs — so Nimble's stream count is a lower bound."""
+    assert allocate_streams_nimble(g).n_streams <= allocate_streams(g).n_streams
+
+
+@settings(max_examples=40, deadline=None)
+@given(dag_strategy)
+def test_sync_count_upper_bound(g):
+    plan = allocate_streams(g)
+    n_edges = sum(len(set(n.inputs)) for n in g)
+    assert 0 <= count_syncs(g, plan) <= n_edges

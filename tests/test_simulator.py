@@ -1,0 +1,77 @@
+"""Simulator semantics: bounds, interference, launch-order effects (the
+paper's Fig. 2 / Fig. 3 phenomena reproduced as assertions)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimConfig,
+    schedule,
+    sequential_makespan,
+    simulate_plan,
+)
+from repro.core.graph import OpCost, OpGraph, OpKind
+from repro.core.profiler import ModelProfiler, V5E
+
+from conftest import build_inception_like, random_dag
+
+
+def _mk(flops=0.0, byts=0.0, vmem=1e6):
+    return OpCost(flops=flops, bytes_read=byts, bytes_written=byts / 4,
+                  vmem_bytes=vmem)
+
+
+def test_makespan_bounded_by_critical_path_and_sequential():
+    rng = np.random.default_rng(0)
+    for seed in range(5):
+        g = random_dag(np.random.default_rng(seed), 30)
+        plan = schedule(g, "opara", "opara")
+        cfg = SimConfig(sync_us=0.0, interference_penalty=0.0)
+        res = simulate_plan(plan, cfg)
+        seq = sequential_makespan(g, plan.profiles, cfg)
+        durations = {i: plan.profiles[i].est_us for i in g.nodes}
+        cp = g.critical_path_cost(durations)
+        assert res.makespan_us <= seq + 1e-6
+        assert res.makespan_us >= cp - 1e-6
+
+
+def test_parallel_beats_sequential_on_branchy_graph():
+    g = build_inception_like(n_blocks=4, width=6, d=512, tokens=256,
+                             with_payloads=False)
+    cfg = SimConfig(sync_us=0.05, interference_penalty=0.13)
+    opara = simulate_plan(schedule(g, "opara", "opara"), cfg)
+    seq = sequential_makespan(g, schedule(g, "sequential", "topo").profiles, cfg)
+    assert opara.makespan_us < seq
+
+
+def test_interference_alternation_beats_same_class_bursts():
+    """Fig. 3: overlapping compute with memory ops beats same-class overlap."""
+    g = OpGraph()
+    root = g.add("root", OpKind.INPUT)
+    for i in range(4):
+        g.add(f"c{i}", OpKind.GEMM, [root], cost=_mk(flops=5e9, byts=1e6))
+        g.add(f"m{i}", OpKind.ELEMENTWISE, [root], cost=_mk(flops=1e3, byts=2e7))
+    cfg = SimConfig(sync_us=0.0, interference_penalty=0.3)
+    res_opara = simulate_plan(schedule(g, "opara", "opara"), cfg)
+    res_topo = simulate_plan(schedule(g, "opara", "topo"), cfg)
+    assert res_opara.makespan_us <= res_topo.makespan_us * 1.001
+
+
+def test_graph_capture_removes_launch_overhead():
+    """PyTorch-eager vs CUDA-Graph gap (paper Fig. 5a: 1.85–4.18×)."""
+    g = build_inception_like(n_blocks=4, width=4, with_payloads=False)
+    plan = schedule(g, "sequential", "topo")
+    with_graph = sequential_makespan(g, plan.profiles, SimConfig(graph_capture=True))
+    without = sequential_makespan(g, plan.profiles, SimConfig(graph_capture=False))
+    assert without > with_graph * 1.5
+
+
+def test_resource_cap_blocks_concurrency():
+    g = OpGraph()
+    root = g.add("root", OpKind.INPUT)
+    for i in range(4):
+        g.add(f"fat{i}", OpKind.GEMM, [root],
+              cost=_mk(flops=1e9, byts=1e6, vmem=100e6))
+    plan = schedule(g, "opara", "opara")
+    tight = simulate_plan(plan, SimConfig(resource_cap=128e6, sync_us=0.0))
+    loose = simulate_plan(plan, SimConfig(resource_cap=1e12, sync_us=0.0))
+    assert tight.makespan_us >= loose.makespan_us

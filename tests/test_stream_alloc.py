@@ -1,0 +1,71 @@
+"""Unit tests for Algorithm 1 (Stream Allocator) and the Nimble baseline."""
+import numpy as np
+import pytest
+
+from repro.core.graph import OpGraph, OpKind, sequential_chain
+from repro.core.nimble import allocate_streams_nimble
+from repro.core.stream_alloc import allocate_streams, count_syncs, validate_plan
+
+from conftest import build_inception_like
+
+
+def test_chain_single_stream():
+    g = sequential_chain(10)
+    plan = allocate_streams(g)
+    validate_plan(g, plan)
+    assert plan.n_streams == 1
+    assert count_syncs(g, plan) == 0
+
+
+def test_parallel_branches_get_parallel_streams():
+    g = OpGraph()
+    root = g.add("root", OpKind.INPUT)
+    branches = [g.add(f"b{i}", OpKind.GEMM, [root]) for i in range(5)]
+    g.add("join", OpKind.ELEMENTWISE, branches)
+    plan = allocate_streams(g)
+    validate_plan(g, plan)
+    # 5 independent branches must land on 5 distinct streams
+    assert len({plan.stream_of[b] for b in branches}) == 5
+
+
+def test_first_successor_inherits_stream():
+    g = OpGraph()
+    a = g.add("a", OpKind.GEMM)
+    b = g.add("b", OpKind.GEMM, [a])   # first successor of a
+    c = g.add("c", OpKind.GEMM, [a])   # second successor → new stream
+    plan = allocate_streams(g)
+    assert plan.stream_of[b] == plan.stream_of[a]
+    assert plan.stream_of[c] != plan.stream_of[a]
+
+
+def test_inception_stream_count_exceeds_nimble(inception_graph):
+    """Paper §5.2: Opara launches MORE streams than Nimble (28 vs 4 for
+    GoogLeNet) — lanes are not limited to a minimum path cover."""
+    opara = allocate_streams(inception_graph)
+    nimble = allocate_streams_nimble(inception_graph)
+    validate_plan(inception_graph, opara)
+    validate_plan(inception_graph, nimble)
+    assert opara.n_streams >= nimble.n_streams
+
+
+def test_nimble_diamond_is_min_path_cover():
+    # a → (b, c) → d : minimum path cover = 2 chains
+    g = OpGraph()
+    a = g.add("a", OpKind.GEMM)
+    b = g.add("b", OpKind.GEMM, [a])
+    c = g.add("c", OpKind.GEMM, [a])
+    g.add("d", OpKind.GEMM, [b, c])
+    plan = allocate_streams_nimble(g)
+    assert plan.n_streams == 2
+
+
+def test_syncs_only_on_cross_stream_edges(inception_graph):
+    plan = allocate_streams(inception_graph)
+    syncs = count_syncs(inception_graph, plan)
+    cross = sum(
+        1
+        for node in inception_graph
+        for p in set(node.inputs)
+        if plan.stream_of[p] != plan.stream_of[node.op_id]
+    )
+    assert syncs == cross
