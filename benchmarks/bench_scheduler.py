@@ -1,13 +1,20 @@
 """Table 1: scheduling-algorithm computation time — Opara Alg. 1 (O(n)) vs
-Nimble's bipartite min-path-cover (O(n³) with transitive closure)."""
+Nimble's bipartite min-path-cover (O(n³) with transitive closure) — plus the
+full-pipeline schedule time and the compiled-plan-cache hit time per
+workload (second schedule of an identical graph signature)."""
 from __future__ import annotations
 
 import time
 
+from repro.core import api as opara
+from repro.core import schedule
 from repro.core.nimble import allocate_streams_nimble
 from repro.core.stream_alloc import allocate_streams
 
 from .workloads import PAPER_WORKLOADS, arch_workload
+
+# structured records picked up by benchmarks/run.py → BENCH_scheduler.json
+RECORDS: list[dict] = []
 
 
 def _time_ms(fn, *args, repeats: int = 5) -> float:
@@ -20,15 +27,28 @@ def _time_ms(fn, *args, repeats: int = 5) -> float:
 
 
 def run() -> list[str]:
-    rows = ["workload,n_ops,opara_ms,nimble_ms,ratio"]
+    RECORDS.clear()
+    rows = ["workload,n_ops,opara_ms,nimble_ms,ratio,schedule_ms,plan_cache_hit_ms"]
     graphs = {name: fn(1) for name, fn in PAPER_WORKLOADS.items()}
     graphs["kimi-k2 (4L)"] = arch_workload("kimi-k2-1t-a32b")
     graphs["hymba (4L)"] = arch_workload("hymba-1.5b")
     for name, g in graphs.items():
         t_opara = _time_ms(allocate_streams, g)
         t_nimble = _time_ms(allocate_streams_nimble, g)
+        t_sched = _time_ms(lambda: schedule(g, "opara", "opara"), repeats=3)
+        opara.clear_caches()
+        opara.plan(g)                     # miss: populates the plan cache
+        t_hit = _time_ms(lambda: opara.plan(g), repeats=3)
         rows.append(f"{name},{len(g)},{t_opara:.3f},{t_nimble:.3f},"
-                    f"{t_nimble / max(t_opara, 1e-9):.1f}")
+                    f"{t_nimble / max(t_opara, 1e-9):.1f},"
+                    f"{t_sched:.3f},{t_hit:.4f}")
+        RECORDS.append({
+            "workload": name, "n_ops": len(g),
+            "opara_alloc_ms": round(t_opara, 4),
+            "nimble_alloc_ms": round(t_nimble, 4),
+            "schedule_ms": round(t_sched, 4),
+            "plan_cache_hit_ms": round(t_hit, 5),
+        })
     return rows
 
 

@@ -85,8 +85,11 @@ def inception_v3_like(batch: int = 1) -> OpGraph:
     return g
 
 
-def bert_like(batch: int = 1, seq: int = 32) -> OpGraph:
-    """BERT-base: 12 encoder layers; parallel ops are (Q,K,V) + embeddings."""
+def bert_like(batch: int = 1, seq: int = 32, n_layers: int = 12) -> OpGraph:
+    """BERT-base: 12 encoder layers; parallel ops are (Q,K,V) + embeddings.
+
+    ``n_layers`` scales depth (overhead benchmarks stack layers to build
+    ≥2000-op graphs — 12 ops per encoder layer)."""
     g = OpGraph("bert")
     d, dff, heads = 768, 3072, 12
     ids = g.add("ids", OpKind.INPUT)
@@ -95,7 +98,7 @@ def bert_like(batch: int = 1, seq: int = 32) -> OpGraph:
     seg = g.add("seg_embed", OpKind.GATHER, [ids], cost=gather_cost(batch * seq, d))
     cur = g.add("embed_sum", OpKind.ELEMENTWISE, [tok, pos, seg],
                 cost=elementwise_cost(batch * seq * d, n_in=3))
-    for l in range(12):
+    for l in range(n_layers):
         n1 = g.add(f"L{l}_ln1", OpKind.NORM, [cur], cost=norm_cost(batch * seq * d))
         qkv = [g.add(f"L{l}_{n}", OpKind.GEMM, [n1],
                      cost=gemm_cost(batch * seq, d, d),

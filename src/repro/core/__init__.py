@@ -12,7 +12,7 @@ from .launch_order import (
 )
 from .fusion import Wave, WaveSchedule, build_waves, fusion_stats
 from .simulator import SimConfig, SimResult, sequential_makespan, simulate
-from .capture import CapturedGraph, capture, run_sequential_uncompiled
+from .capture import CapturedGraph, Step, capture, run_sequential_uncompiled
 from .scheduler import (
     ALLOC_POLICIES,
     SchedulePlan,
@@ -21,6 +21,7 @@ from .scheduler import (
     schedule,
     simulate_plan,
 )
+from .api import cache_stats, clear_caches, graph_signature, optimize, plan
 
 __all__ = [
     "IntensityClass", "OpCost", "OpGraph", "OpKind", "OpNode",
@@ -30,7 +31,8 @@ __all__ = [
     "resource_only_order", "topo_order",
     "Wave", "WaveSchedule", "build_waves", "fusion_stats",
     "SimConfig", "SimResult", "sequential_makespan", "simulate",
-    "CapturedGraph", "capture", "run_sequential_uncompiled",
+    "CapturedGraph", "Step", "capture", "run_sequential_uncompiled",
     "ALLOC_POLICIES", "SchedulePlan", "compare_policies", "compile_plan",
     "schedule", "simulate_plan",
+    "cache_stats", "clear_caches", "graph_signature", "optimize", "plan",
 ]

@@ -9,15 +9,87 @@
 ``optimize`` = Alg.1 streams + profile + Alg.2 order + wave fusion + capture,
 i.e. the whole paper pipeline with one call, non-intrusively wrapping any
 operator graph.
+
+Compiled-plan cache
+-------------------
+Scheduling is a pure function of graph *structure* (op kinds, edges, shapes,
+dtypes, analytic costs) and the chosen policies — never of the weight
+values.  ``plan()`` therefore memoizes :class:`SchedulePlan`s under a
+structural :func:`graph_signature`; a second ``plan()``/``schedule()`` on an
+architecturally-identical graph (e.g. every ``serving`` engine tick, or
+rebuilding the same model) does zero re-profiling, re-allocation and
+re-ordering.  On a hit for a *different* graph object the plan is rebound to
+the caller's graph (op_ids are structural: same build order → same ids).
+
+``optimize()`` adds a second cache level for the captured executable.  An
+executable closes over payload callables and weights, so its key is the
+plan signature PLUS an identity fingerprint of every node's ``fn`` and
+``meta["consts"]`` arrays: same graph object (or same weight arrays) → the
+IDENTICAL executable object, no re-lowering, no re-trace.  Cached entries
+pin their graph alive, so ``id()`` fingerprints cannot collide with live
+objects.
+
+Invalidation: both caches are LRU-bounded (:data:`_CACHE_SIZE`); mutating a
+graph via ``add()`` changes its signature (and its topology cache) so stale
+hits are impossible.  ``clear_caches()`` resets everything (tests).
+``measured_inputs`` plans are never cached — measured profiles depend on
+input values.
 """
 from __future__ import annotations
 
+import dataclasses
+from collections import OrderedDict
 from typing import Any, Mapping
 
 from .capture import CapturedGraph
 from .graph import OpGraph
 from .profiler import HardwareSpec, V5E
 from .scheduler import SchedulePlan, compile_plan, schedule
+
+_CACHE_SIZE = 64
+_plan_cache: OrderedDict[tuple, SchedulePlan] = OrderedDict()
+_exec_cache: OrderedDict[tuple, CapturedGraph] = OrderedDict()
+_stats = {"plan_hits": 0, "plan_misses": 0, "exec_hits": 0, "exec_misses": 0}
+
+
+def graph_signature(
+    graph: OpGraph,
+    alloc_policy: str = "opara",
+    order_policy: str = "opara",
+    hw: HardwareSpec = V5E,
+    max_lanes: int | None = None,
+) -> tuple:
+    """Structural cache key: everything scheduling reads, nothing it doesn't.
+
+    Per node: kind, edges, output shape/dtype, fusion signature, analytic
+    cost fields, payload marker and const shapes (capture's stackability
+    inputs) — see :meth:`OpGraph.node_signature`, which memoizes the node
+    part per graph version.  Weight *values* and payload identities are
+    deliberately excluded — they cannot change a schedule.
+    """
+    return (graph.node_signature(), alloc_policy, order_policy, hw, max_lanes)
+
+
+def _weights_fingerprint(graph: OpGraph) -> tuple:
+    """Identity of every payload + const array (executable cache key part)."""
+    return tuple(
+        (id(n.fn), tuple(id(c) for c in n.meta.get("consts", ())))
+        for n in graph
+    )
+
+
+def _lru_get(cache: OrderedDict, key: tuple) -> Any | None:
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key]
+    return None
+
+
+def _lru_put(cache: OrderedDict, key: tuple, value: Any) -> None:
+    cache[key] = value
+    cache.move_to_end(key)
+    while len(cache) > _CACHE_SIZE:
+        cache.popitem(last=False)
 
 
 def plan(
@@ -26,8 +98,23 @@ def plan(
     order_policy: str = "opara",
     hw: HardwareSpec = V5E,
     measured_inputs: Mapping[int, Any] | None = None,
+    cache: bool = True,
 ) -> SchedulePlan:
-    return schedule(graph, alloc_policy, order_policy, hw, measured_inputs=measured_inputs)
+    if measured_inputs is not None or not cache:
+        return schedule(graph, alloc_policy, order_policy, hw,
+                        measured_inputs=measured_inputs)
+    key = graph_signature(graph, alloc_policy, order_policy, hw)
+    hit = _lru_get(_plan_cache, key)
+    if hit is not None:
+        _stats["plan_hits"] += 1
+        if hit.graph is graph:
+            return hit
+        # same structure, different graph object: rebind (op_ids match)
+        return dataclasses.replace(hit, graph=graph)
+    _stats["plan_misses"] += 1
+    p = schedule(graph, alloc_policy, order_policy, hw)
+    _lru_put(_plan_cache, key, p)
+    return p
 
 
 def optimize(
@@ -36,6 +123,35 @@ def optimize(
     order_policy: str = "opara",
     hw: HardwareSpec = V5E,
     output_ids=None,
+    gemm_kernel: str = "auto",
+    cache: bool = True,
 ) -> CapturedGraph:
-    p = plan(graph, alloc_policy, order_policy, hw)
-    return compile_plan(p, output_ids=output_ids)
+    p = plan(graph, alloc_policy, order_policy, hw, cache=cache)
+    if not cache:
+        return compile_plan(p, output_ids=output_ids, gemm_kernel=gemm_kernel)
+    key = (
+        graph_signature(graph, alloc_policy, order_policy, hw),
+        _weights_fingerprint(graph),
+        tuple(output_ids) if output_ids is not None else None,
+        gemm_kernel,
+    )
+    hit = _lru_get(_exec_cache, key)
+    if hit is not None:
+        _stats["exec_hits"] += 1
+        return hit
+    _stats["exec_misses"] += 1
+    exe = compile_plan(p, output_ids=output_ids, gemm_kernel=gemm_kernel)
+    _lru_put(_exec_cache, key, exe)
+    return exe
+
+
+def cache_stats() -> dict[str, int]:
+    return dict(_stats, plan_entries=len(_plan_cache),
+                exec_entries=len(_exec_cache))
+
+
+def clear_caches() -> None:
+    _plan_cache.clear()
+    _exec_cache.clear()
+    for k in _stats:
+        _stats[k] = 0

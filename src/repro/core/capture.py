@@ -4,14 +4,33 @@ The CUDA-Graph analogue on TPU is AOT compilation: executing the whole wave
 schedule inside a single ``jax.jit`` region removes per-op dispatch exactly
 like replaying a captured graph removes kernel-launch overhead.
 
-Execution semantics:
+Two-phase **program compiler** (the Nimble insight — move every scheduling
+decision ahead of time so the replay path does zero per-op work):
+
+Phase 1, ``_lower`` (capture time, runs once per plan):
+  * every wave is resolved into a flat list of :class:`Step`s — either one
+    payload call or one fused stacked call;
+  * per-branch constants (weights) of stacked groups are stacked **once**
+    into device arrays held *outside* the trace, so re-tracing never
+    re-stacks and the jaxpr sees them as hoisted constants;
+  * GEMM-kind fusion groups whose payloads declare ``meta["payload"] ==
+    "matmul"`` are routed to the ``branch_gemm`` Pallas kernel (interpret
+    mode on CPU, MXU tiles on TPU) with a ``vmap`` fallback for
+    non-tileable shapes or oversized interpret-mode grids;
+  * each op gets a slot in a flat list environment and each slot a
+    precomputed last-use step, so intermediates are dropped as soon as
+    they are dead (list indexing replaces dict hashing in the hot loop).
+
+Phase 2, ``run`` (trace/replay): walks the pre-lowered step list — no
+grouping decisions, no const re-stacking, no dict lookups.
+
+Execution semantics are unchanged from the wave model:
   * waves run in order;
-  * within a wave, fusion groups of size > 1 are executed as ONE stacked op
-    (``jnp.stack`` inputs → vmapped payload → unstack), which XLA lowers to a
-    single batched GEMM — the horizontal-fusion realization of streams;
+  * within a wave, fusion groups of size > 1 execute as ONE stacked op
+    (batched GEMM / vmapped payload) — the horizontal-fusion realization of
+    streams;
   * singleton groups run as-is; XLA still sees them inside one program and
-    can interleave their DMA with neighbouring waves' compute (launch-order
-    interleaving of memory/compute ops makes this overlap *available*).
+    can interleave their DMA with neighbouring waves' compute.
 """
 from __future__ import annotations
 
@@ -24,6 +43,30 @@ import jax.numpy as jnp
 from .fusion import WaveSchedule
 from .graph import OpGraph
 
+# Routing targets for a lowered step.
+_CALL = "call"                # single payload call
+_VMAP = "vmap"                # stacked group via vmapped payload
+_BRANCH_GEMM = "branch_gemm"  # stacked group via the Pallas fused GEMM
+
+# In interpret mode (CPU) the Pallas grid is unrolled at trace time; beyond
+# this many grid points the vmap fallback compiles and runs faster.
+_INTERPRET_GRID_LIMIT = 64
+
+
+@dataclasses.dataclass
+class Step:
+    """One pre-lowered execution step (all decisions made at capture time)."""
+
+    route: str                          # _CALL | _VMAP | _BRANCH_GEMM
+    fn: Callable[..., Any] | None       # payload (vmapped for _VMAP)
+    arg_slots: tuple                    # _CALL: (slot, ...) positional args
+                                        # stacked: per-arg tuple of branch slots
+    consts: tuple                       # hoisted constants (stacked: device
+                                        # arrays stacked ONCE at capture time)
+    out_slots: tuple[int, ...]          # one slot per branch (singles: one)
+    free_slots: tuple[int, ...]         # slots dead after this step
+    op_ids: tuple[int, ...]             # provenance (tests / debugging)
+
 
 @dataclasses.dataclass
 class CapturedGraph:
@@ -35,6 +78,7 @@ class CapturedGraph:
     output_ids: list[int]
     fn: Callable[..., Any]           # python callable (uncompiled)
     jitted: Callable[..., Any]       # jit'd single-program executable
+    steps: list[Step] = dataclasses.field(default_factory=list)
 
     def __call__(self, inputs: Mapping[str, Any]) -> list[Any]:
         args = self._bind(inputs)
@@ -53,6 +97,15 @@ class CapturedGraph:
             args.append(inputs[name])
         return args
 
+    def program_stats(self) -> dict[str, float]:
+        routes = [s.route for s in self.steps]
+        return {
+            "n_steps": float(len(self.steps)),
+            "n_single": float(routes.count(_CALL)),
+            "n_vmap": float(routes.count(_VMAP)),
+            "n_branch_gemm": float(routes.count(_BRANCH_GEMM)),
+        }
+
 
 def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
     """A group is stackable if all ops share fuse_sig, fn arity and
@@ -60,8 +113,8 @@ def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
 
     Contract: branch-varying parameters (weights) must be declared in
     ``meta["consts"]`` — the capturer stacks them alongside the inputs and
-    executes ONE vmapped payload (the fused kernel).  Ops whose closures
-    hide differing state must leave ``fuse_sig=None``.
+    executes ONE fused payload.  Ops whose closures hide differing state
+    must leave ``fuse_sig=None``.
     """
     if len(group) < 2:
         return False
@@ -69,9 +122,12 @@ def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
     if first.fn is None or first.fuse_sig is None:
         return False
     c0 = first.meta.get("consts", ())
+    arity0 = len(first.inputs)
     for g in group:
         n = graph.nodes[g]
         if n.fuse_sig != first.fuse_sig or n.fn is None:
+            return False
+        if len(n.inputs) != arity0:
             return False
         cg = n.meta.get("consts", ())
         if len(cg) != len(c0):
@@ -81,56 +137,183 @@ def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
     return True
 
 
+def _gemm_routable(graph: OpGraph, group: Sequence[int]) -> bool:
+    """True iff the stacked group can go to the fused branch-GEMM kernel.
+
+    Contract (explicit opt-in, no payload guessing): every node declares
+    ``meta["payload"] == "matmul"`` — payload semantics are exactly
+    ``x @ w (+ b)`` with ``consts == (w,)`` or ``(w, b)``, ``w.ndim == 2``.
+    """
+    for g in group:
+        n = graph.nodes[g]
+        if n.meta.get("payload") != "matmul" or len(n.inputs) != 1:
+            return False
+        consts = n.meta.get("consts", ())
+        if len(consts) not in (1, 2):
+            return False
+        if jnp.ndim(consts[0]) != 2:
+            return False
+        if len(consts) == 2 and jnp.ndim(consts[1]) != 1:
+            return False
+    return True
+
+
+def _pick_gemm_route(w: jax.Array, n_branches: int, gemm_kernel: str) -> str:
+    """Decide Pallas vs vmap for an eligible GEMM group (capture time)."""
+    if gemm_kernel == "vmap":
+        return _VMAP
+    if gemm_kernel == "pallas":
+        return _BRANCH_GEMM
+    # "auto": on TPU always take the fused kernel; on CPU (interpret mode)
+    # only when the unrolled grid stays small — the public branch_gemm
+    # wrapper additionally falls back to the einsum reference for
+    # non-tileable shapes, which is still one fused op.
+    from ..kernels import interpret_mode
+
+    if not interpret_mode():
+        return _BRANCH_GEMM
+    k, f = w.shape
+    grid_points = n_branches * max(k // 512, 1) * max(f // 128, 1)
+    return _BRANCH_GEMM if grid_points <= _INTERPRET_GRID_LIMIT else _VMAP
+
+
+def _branch_gemm_step() -> Callable[..., Any]:
+    """Build the fused-GEMM callable for one stacked group.
+
+    The executor calls it ``fn(x_stacked, *step.consts)`` — the pre-stacked
+    weights ``w: [N, K, F]`` (and optionally bias ``b: [N, F]``) flow in
+    through ``Step.consts``.  The input arrives stacked ``x: [N, *batch,
+    K]``; batch dims are flattened for the kernel's [N, M, K] @ [N, K, F]
+    contract and restored after.
+    """
+    def fused(x: jax.Array, w: jax.Array, *rest: jax.Array) -> jax.Array:
+        from ..kernels.branch_gemm.ops import branch_gemm
+
+        n, k, f = w.shape[0], w.shape[1], w.shape[2]
+        batch_shape = x.shape[1:-1]
+        out = branch_gemm(x.reshape(n, -1, k), w)
+        out = out.reshape((n,) + batch_shape + (f,))
+        if rest:  # bias [N, F] broadcast over batch dims
+            b = rest[0]
+            out = out + b.reshape((n,) + (1,) * len(batch_shape) + (f,))
+        return out
+
+    return fused
+
+
+def _lower(
+    graph: OpGraph,
+    schedule: WaveSchedule,
+    output_ids: Sequence[int],
+    gemm_kernel: str = "auto",
+) -> tuple[list[Step], dict[int, int], int]:
+    """Phase 1: wave schedule → pre-lowered step list + slot assignment."""
+    slot_of = {op: k for k, op in enumerate(graph.nodes)}
+    n_slots = len(slot_of)
+
+    steps: list[Step] = []
+    for wave in schedule.waves:
+        for group in wave.fusion_groups:
+            if _can_stack(graph, group):
+                nodes = [graph.nodes[o] for o in group]
+                arity = len(nodes[0].inputs)
+                arg_slots = tuple(
+                    tuple(slot_of[n.inputs[a]] for n in nodes)
+                    for a in range(arity)
+                )
+                n_consts = len(nodes[0].meta.get("consts", ()))
+                # const hoisting: stacked ONCE here, outside the trace —
+                # jax.jit sees ready-made device constants, never re-stacks.
+                consts = tuple(
+                    jnp.stack([jnp.asarray(n.meta["consts"][c]) for n in nodes])
+                    for c in range(n_consts)
+                )
+                if _gemm_routable(graph, group):
+                    route = _pick_gemm_route(
+                        nodes[0].meta["consts"][0], len(group), gemm_kernel)
+                else:
+                    route = _VMAP
+                fn = (_branch_gemm_step() if route == _BRANCH_GEMM
+                      else jax.vmap(nodes[0].fn))
+                steps.append(Step(
+                    route=route, fn=fn, arg_slots=arg_slots, consts=consts,
+                    out_slots=tuple(slot_of[o] for o in group),
+                    free_slots=(), op_ids=tuple(group)))
+            else:
+                for op in group:
+                    node = graph.nodes[op]
+                    if node.fn is None:
+                        continue
+                    steps.append(Step(
+                        route=_CALL, fn=node.fn,
+                        arg_slots=tuple(slot_of[p] for p in node.inputs),
+                        consts=tuple(node.meta.get("consts", ())),
+                        out_slots=(slot_of[op],), free_slots=(),
+                        op_ids=(op,)))
+
+    # dead-slot analysis: a slot is freed right after its last consuming
+    # step, unless it backs an output.
+    keep = {slot_of[o] for o in output_ids}
+    last_use: dict[int, int] = {}
+    for k, step in enumerate(steps):
+        consumed = (step.arg_slots if step.route == _CALL
+                    else [s for slots in step.arg_slots for s in slots])
+        for s in consumed:
+            last_use[s] = k
+    free_at: dict[int, list[int]] = {}
+    for s, last in last_use.items():
+        if s not in keep:
+            free_at.setdefault(last, []).append(s)
+    for k, step in enumerate(steps):
+        step.free_slots = tuple(
+            s for s in free_at.get(k, ()) if s not in step.out_slots)
+    return steps, slot_of, n_slots
+
+
 def capture(
     graph: OpGraph,
     schedule: WaveSchedule,
     output_ids: Sequence[int] | None = None,
     donate_inputs: bool = False,
+    gemm_kernel: str = "auto",
 ) -> CapturedGraph:
-    """Build the single-program executable from a wave schedule."""
+    """Build the single-program executable from a wave schedule.
+
+    ``gemm_kernel`` routes eligible stacked GEMM groups: ``"auto"`` (Pallas
+    on TPU / small interpret grids, vmap otherwise), ``"pallas"`` (always
+    the fused kernel, einsum-ref fallback for non-tileable shapes) or
+    ``"vmap"`` (always the generic stacked payload).
+    """
+    if gemm_kernel not in ("auto", "pallas", "vmap"):
+        raise ValueError(f"unknown gemm_kernel {gemm_kernel!r}")
     graph.validate()
     input_ids = [n.op_id for n in graph if n.fn is None]
     if output_ids is None:
         output_ids = graph.leaves()
     output_ids = list(output_ids)
 
-    # Pre-resolve execution program: list of steps; each step is either
-    # ("single", op_id) or ("stacked", [op_ids]) — decided once at capture.
-    program: list[tuple[str, Any]] = []
-    for wave in schedule.waves:
-        for group in wave.fusion_groups:
-            if _can_stack(graph, group):
-                program.append(("stacked", list(group)))
-            else:
-                for op in group:
-                    if graph.nodes[op].fn is not None:
-                        program.append(("single", op))
+    steps, slot_of, n_slots = _lower(graph, schedule, output_ids, gemm_kernel)
+    input_slots = [slot_of[i] for i in input_ids]
+    output_slots = [slot_of[o] for o in output_ids]
+    tree_map = jax.tree_util.tree_map
 
     def run(*args: Any) -> list[Any]:
-        env: dict[int, Any] = dict(zip(input_ids, args))
-        for tag, payload in program:
-            if tag == "single":
-                node = graph.nodes[payload]
-                consts = node.meta.get("consts", ())
-                env[payload] = node.fn(*[env[p] for p in node.inputs], *consts)
+        env: list[Any] = [None] * n_slots
+        for s, a in zip(input_slots, args):
+            env[s] = a
+        for step in steps:
+            if step.route == _CALL:
+                out = step.fn(*[env[s] for s in step.arg_slots], *step.consts)
+                env[step.out_slots[0]] = out
             else:
-                ops = payload
-                nodes = [graph.nodes[o] for o in ops]
-                # stack each positional operand AND each per-branch constant
-                arity = len(nodes[0].inputs)
-                stacked = [
-                    jnp.stack([env[n.inputs[a]] for n in nodes]) for a in range(arity)
-                ]
-                n_consts = len(nodes[0].meta.get("consts", ()))
-                stacked += [
-                    jnp.stack([jnp.asarray(n.meta["consts"][c]) for n in nodes])
-                    for c in range(n_consts)
-                ]
-                fn0 = nodes[0].fn
-                outs = jax.vmap(fn0)(*stacked)
-                for k, o in enumerate(ops):
-                    env[o] = jax.tree_util.tree_map(lambda x: x[k], outs)
-        return [env[o] for o in output_ids]
+                stacked = [jnp.stack([env[s] for s in slots])
+                           for slots in step.arg_slots]
+                outs = step.fn(*stacked, *step.consts)
+                for k, slot in enumerate(step.out_slots):
+                    env[slot] = tree_map(lambda x: x[k], outs)
+            for s in step.free_slots:
+                env[s] = None
+        return [env[s] for s in output_slots]
 
     jit_kwargs: dict[str, Any] = {}
     if donate_inputs:
@@ -142,6 +325,7 @@ def capture(
         output_ids=output_ids,
         fn=run,
         jitted=jax.jit(run, **jit_kwargs),
+        steps=steps,
     )
 
 

@@ -77,13 +77,16 @@ def build_waves(
         last_wave_in_stream[s] = w
         load[w] = load.get(w, 0) + 1
 
-    n = max(wave_of.values(), default=-1) + 1
+    # single-pass bucketing: `order` is walked once; ops land in their wave
+    # bucket in launch order (was an O(n_waves · n_ops) rescan).
+    buckets: dict[int, list[int]] = {}
+    for op in order:
+        buckets.setdefault(wave_of[op], []).append(op)
     waves: list[Wave] = []
-    for k in range(n):
-        ops = [op for op in order if wave_of[op] == k]
-        if not ops:
-            continue
-        waves.append(Wave(index=len(waves), op_ids=ops, fusion_groups=_group(graph, ops)))
+    for k in sorted(buckets):
+        ops = buckets[k]
+        waves.append(Wave(index=len(waves), op_ids=ops,
+                          fusion_groups=_group(graph, ops)))
     return WaveSchedule(waves=waves)
 
 

@@ -105,6 +105,16 @@ class OpNode:
         return self.op_id
 
 
+@dataclasses.dataclass
+class _Topology:
+    """Memoized topology bundle shared by every pipeline stage."""
+
+    succ: dict[int, list[int]]         # per-edge successors (duplicates kept)
+    unique_succ: dict[int, list[int]]  # deduplicated successors
+    indeg: dict[int, int]              # unique-edge indegrees
+    order: list[int]                   # Kahn order (may be short on cycles)
+
+
 class OpGraph:
     """A DAG of :class:`OpNode`.  Insertion order is a topological order.
 
@@ -118,6 +128,14 @@ class OpGraph:
         self.name = name
         self.nodes: dict[int, OpNode] = {}
         self._next_id = 0
+        # Memoized topology (successors / indegrees / topo order).  Every
+        # pipeline stage (validate → profile → alloc → order → waves →
+        # capture) walks the same DAG; without the cache schedule() is
+        # O(k·(V+E)) with k = number of stages.  Invalidated by add().
+        self._topo: _Topology | None = None
+        # Memoized structural node signature (compiled-plan cache key part);
+        # also invalidated by add().
+        self._node_sig: tuple | None = None
 
     # -- construction -------------------------------------------------------
     def add(
@@ -137,6 +155,8 @@ class OpGraph:
                 raise ValueError(f"op {name!r}: unknown input id {i}")
         op_id = self._next_id
         self._next_id += 1
+        self._topo = None       # invalidate memoized topology
+        self._node_sig = None   # ... and the structural signature
         self.nodes[op_id] = OpNode(
             op_id=op_id,
             name=name,
@@ -161,63 +181,118 @@ class OpGraph:
     def predecessors(self, op_id: int) -> tuple[int, ...]:
         return self.nodes[op_id].inputs
 
+    # -- memoized topology ---------------------------------------------------
+    def _topology(self) -> "_Topology":
+        """Compute (once) successors, unique successors, indegrees and the
+        Kahn topological order.  All public topology queries read this cache;
+        ``add()`` invalidates it.  Returned structures are SHARED — callers
+        must not mutate them (use the public accessors, which copy where the
+        call convention requires a private mutable map)."""
+        if self._topo is None:
+            succ: dict[int, list[int]] = {i: [] for i in self.nodes}
+            usucc: dict[int, list[int]] = {i: [] for i in self.nodes}
+            indeg: dict[int, int] = {}
+            for node in self.nodes.values():
+                uniq = set(node.inputs)
+                indeg[node.op_id] = len(uniq)
+                for p in node.inputs:
+                    succ[p].append(node.op_id)
+                for p in uniq:
+                    usucc[p].append(node.op_id)
+
+            import heapq
+
+            work = dict(indeg)
+            ready = [i for i, d in work.items() if d == 0]
+            heapq.heapify(ready)
+            out: list[int] = []
+            while ready:
+                i = heapq.heappop(ready)
+                out.append(i)
+                for s in usucc[i]:
+                    work[s] -= 1
+                    if work[s] == 0:
+                        heapq.heappush(ready, s)
+            self._topo = _Topology(succ=succ, unique_succ=usucc, indeg=indeg,
+                                   order=out)
+        return self._topo
+
     def successors_map(self) -> dict[int, list[int]]:
-        succ: dict[int, list[int]] = {i: [] for i in self.nodes}
-        for node in self.nodes.values():
-            for p in node.inputs:
-                succ[p].append(node.op_id)
-        return succ
+        """op_id -> successor ids (one entry per edge, duplicates kept).
+        Shared cache — treat as read-only."""
+        return self._topology().succ
+
+    def unique_successors_map(self) -> dict[int, list[int]]:
+        """op_id -> unique successor ids.  Shared cache — read-only."""
+        return self._topology().unique_succ
 
     def indegree_map(self) -> dict[int, int]:
-        return {i: len(set(n.inputs)) for i, n in self.nodes.items()}
+        """Fresh copy (callers decrement it during scheduling)."""
+        return dict(self._topology().indeg)
 
     def roots(self) -> list[int]:
         return [i for i, n in self.nodes.items() if not n.inputs]
 
     def leaves(self) -> list[int]:
-        succ = self.successors_map()
+        succ = self._topology().succ
         return [i for i in self.nodes if not succ[i]]
 
     def topological_order(self) -> list[int]:
         """Kahn order with FIFO tie-break == insertion order (the paper's
-        default "topological sorting order" baseline)."""
-        indeg = self.indegree_map()
-        succ = self.successors_map()
-        ready = sorted(i for i, d in indeg.items() if d == 0)
-        out: list[int] = []
-        import heapq
-
-        heapq.heapify(ready)
-        while ready:
-            i = heapq.heappop(ready)
-            out.append(i)
-            for s in succ[i]:
-                # inputs may repeat; only decrement once per unique edge
-                pass
-            for s in set(succ[i]):
-                indeg[s] -= 1
-                if indeg[s] == 0:
-                    heapq.heappush(ready, s)
-        if len(out) != len(self.nodes):
+        default "topological sorting order" baseline).  Memoized; raises on
+        cycles."""
+        topo = self._topology()
+        if len(topo.order) != len(self.nodes):
             raise ValueError("graph has a cycle")
-        return out
+        return list(topo.order)
 
     def depth_first_order(self) -> list[int]:
         """Depth-first topological order (paper Fig. 2 "order 1" baseline)."""
-        succ = self.successors_map()
-        indeg = self.indegree_map()
+        topo = self._topology()
+        indeg = dict(topo.indeg)
         stack = sorted((i for i, d in indeg.items() if d == 0), reverse=True)
         out: list[int] = []
         while stack:
             i = stack.pop()
             out.append(i)
-            for s in sorted(set(succ[i]), reverse=True):
+            for s in sorted(topo.unique_succ[i], reverse=True):
                 indeg[s] -= 1
                 if indeg[s] == 0:
                     stack.append(s)
         if len(out) != len(self.nodes):
             raise ValueError("graph has a cycle")
         return out
+
+    def invalidate_signature(self) -> None:
+        """Must be called after mutating node costs/meta in place (e.g. a
+        measuring profiler pass writes ``measured_us``) — ``add()`` is the
+        only mutation the signature cache sees on its own."""
+        self._node_sig = None
+
+    def node_signature(self) -> tuple:
+        """Memoized structural fingerprint of every node: everything the
+        scheduling pipeline reads (kind, edges, shapes, dtypes, fusion
+        signature, analytic cost, payload marker, const shapes) and nothing
+        it doesn't (weight values, payload identities).  The compiled-plan
+        cache in :mod:`repro.core.api` builds its keys from this."""
+        if self._node_sig is None:
+            self._node_sig = tuple(
+                (
+                    n.kind.value,
+                    n.inputs,
+                    n.out_shape,
+                    str(n.out_dtype),
+                    n.fuse_sig,
+                    (n.cost.flops, n.cost.bytes_read, n.cost.bytes_written,
+                     n.cost.vmem_bytes, n.cost.occupancy, n.cost.measured_us),
+                    n.fn is None,
+                    n.meta.get("payload"),
+                    tuple(tuple(getattr(c, "shape", ()))
+                          for c in n.meta.get("consts", ())),
+                )
+                for n in self.nodes.values()
+            )
+        return self._node_sig
 
     def validate(self) -> None:
         for node in self.nodes.values():

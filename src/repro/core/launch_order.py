@@ -27,7 +27,7 @@ from .profiler import OpProfile
 def opara_launch_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[int]:
     """Algorithm 2, line-by-line (heaps instead of lists for O(n log n))."""
     indeg = graph.indegree_map()
-    succ = graph.successors_map()
+    succ = graph.unique_successors_map()
 
     l_mem: list[tuple[float, int]] = []   # line 1: L_mem
     l_comp: list[tuple[float, int]] = []  # line 1: L_comp
@@ -54,7 +54,7 @@ def opara_launch_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[i
         take_mem = not take_mem
         _, v_min = heapq.heappop(lst)  # lines 5-6: least-resource op
         queue.append(v_min)
-        for s in set(succ[v_min]):  # lines 7-16: update indegrees
+        for s in succ[v_min]:  # lines 7-16: update indegrees
             indeg[s] -= 1
             if indeg[s] == 0:
                 push(s)
@@ -73,7 +73,7 @@ def depth_first_order(graph: OpGraph, profiles: dict[int, OpProfile] | None = No
 def resource_only_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[int]:
     """Ablation: smallest-resource-first globally, ignoring intensity class."""
     indeg = graph.indegree_map()
-    succ = graph.successors_map()
+    succ = graph.unique_successors_map()
     heap: list[tuple[float, int]] = []
     for i, d in indeg.items():
         if d == 0:
@@ -82,7 +82,7 @@ def resource_only_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[
     while heap:
         _, i = heapq.heappop(heap)
         out.append(i)
-        for s in set(succ[i]):
+        for s in succ[i]:
             indeg[s] -= 1
             if indeg[s] == 0:
                 heapq.heappush(heap, (profiles[s].cost.resource_demand(), s))
@@ -93,7 +93,7 @@ def largest_first_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[
     """Adversarial baseline: largest-resource-first (the GPU-blocking worst
     case the paper's Fig. 2 'inadequate order' represents)."""
     indeg = graph.indegree_map()
-    succ = graph.successors_map()
+    succ = graph.unique_successors_map()
     heap: list[tuple[float, int]] = []
     for i, d in indeg.items():
         if d == 0:
@@ -102,7 +102,7 @@ def largest_first_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[
     while heap:
         _, i = heapq.heappop(heap)
         out.append(i)
-        for s in set(succ[i]):
+        for s in succ[i]:
             indeg[s] -= 1
             if indeg[s] == 0:
                 heapq.heappush(heap, (-profiles[s].cost.resource_demand(), s))

@@ -26,12 +26,12 @@ _INF = float("inf")
 
 def _transitive_closure(graph: OpGraph) -> dict[int, set[int]]:
     """Reachability sets via reverse-topological DP (O(V·E) bitset-ish)."""
-    succ = graph.successors_map()
+    succ = graph.unique_successors_map()
     order = graph.topological_order()
     reach: dict[int, set[int]] = {}
     for i in reversed(order):
         r: set[int] = set()
-        for s in set(succ[i]):
+        for s in succ[i]:
             r.add(s)
             r |= reach[s]
         reach[i] = r
@@ -95,8 +95,8 @@ def allocate_streams_nimble(graph: OpGraph, use_closure: bool = True) -> StreamP
         reach = _transitive_closure(graph)
         adj = {u: sorted(reach[u]) for u in ids}
     else:
-        succ = graph.successors_map()
-        adj = {u: sorted(set(succ[u])) for u in ids}
+        succ = graph.unique_successors_map()
+        adj = {u: sorted(succ[u]) for u in ids}
 
     match = _hopcroft_karp(adj, ids)
 

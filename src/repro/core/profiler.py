@@ -100,6 +100,9 @@ class ModelProfiler:
         """
         values: dict[int, Any] = dict(inputs)
         profiles = self.profile(graph)
+        # measured_us mutates node costs in place → the structural signature
+        # memoized on the graph (plan-cache key) must be recomputed.
+        graph.invalidate_signature()
         for i in graph.topological_order():
             node = graph.nodes[i]
             if node.fn is None:

@@ -101,8 +101,10 @@ def schedule(
     )
 
 
-def compile_plan(plan: SchedulePlan, output_ids=None, donate_inputs=False) -> CapturedGraph:
-    return capture(plan.graph, plan.waves, output_ids=output_ids, donate_inputs=donate_inputs)
+def compile_plan(plan: SchedulePlan, output_ids=None, donate_inputs=False,
+                 gemm_kernel: str = "auto") -> CapturedGraph:
+    return capture(plan.graph, plan.waves, output_ids=output_ids,
+                   donate_inputs=donate_inputs, gemm_kernel=gemm_kernel)
 
 
 def simulate_plan(plan: SchedulePlan, cfg: SimConfig = SimConfig()) -> SimResult:

@@ -118,10 +118,13 @@ def _gemm_node(g, name, inp, pl_linear, m, k, n, bias: bool):
         return g.add(name, OpKind.GEMM, [inp], cost=gemm_cost(m, k, n),
                      fuse_sig=("gemm", k, n, bias))
     consts = (pl_linear["w"],) + ((pl_linear["b"],) if bias else ())
+    # payload="matmul" declares x @ w (+ b) semantics — the capturer's
+    # routing contract for the fused branch_gemm Pallas kernel.
     return g.add(name, OpKind.GEMM, [inp],
                  fn=_matmul_bias if bias else _matmul,
                  cost=gemm_cost(m, k, n),
-                 fuse_sig=("gemm", k, n, bias), consts=consts)
+                 fuse_sig=("gemm", k, n, bias), consts=consts,
+                 payload="matmul")
 
 
 def _dense_layer(g, cfg, x, b, s, tag, pl, moe: bool, moe_branch_cap: int = 16):

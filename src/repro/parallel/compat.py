@@ -1,0 +1,32 @@
+"""jax version compatibility for the distribution layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``) around jax 0.6.
+This wrapper presents one call shape against either API, with replication
+checking disabled (our pipeline/collective kernels intentionally produce
+per-device-divergent intermediates).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def shard_map(f: Callable[..., Any], mesh, in_specs, out_specs) -> Callable[..., Any]:
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a mapped mesh axis (``jax.lax.axis_size`` is only
+    available on newer jax; ``psum`` of a python literal constant-folds to
+    the axis size on older versions)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
+
 
 def pipeline_apply(
     layer_fn: Callable[[Any, jax.Array], jax.Array],
@@ -78,8 +80,8 @@ def pipeline_apply(
 
     in_specs = (P(axis), P())       # params stage-sharded; x replicated
     out_specs = P()
-    fn = jax.shard_map(stage_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map(stage_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
     return fn(stage_params, x)
 
 

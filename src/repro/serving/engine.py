@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import weakref
 from typing import Any
 
 import jax
@@ -27,6 +28,24 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import Model
 from .sampler import sample_token
+
+# Executable reuse across engine instances (the serving-side analogue of the
+# core compiled-plan cache): a jax.jit wrapper created per-engine would
+# retrace the decode program for every new engine even when the model is
+# unchanged.  Keyed weakly by the model instance so traces die with it.
+_DECODE_JIT_CACHE: "weakref.WeakKeyDictionary[Any, Any]" = weakref.WeakKeyDictionary()
+
+
+def _cached_decode_fn(model: Model):
+    fn = _DECODE_JIT_CACHE.get(model)
+    if fn is None:
+        # close over a weakref, not the model: a strong ref from the cached
+        # value would pin the weak key forever and the entry could never be
+        # evicted.  At trace time the model is alive (the engine holds it).
+        ref = weakref.ref(model)
+        fn = jax.jit(lambda p, c, t, pos: ref().decode(p, t, c, pos))
+        _DECODE_JIT_CACHE[model] = fn
+    return fn
 
 
 class RequestState(enum.Enum):
@@ -62,8 +81,7 @@ class InferenceEngine:
         from ..models.transformer import init_decode_caches
         cache_len = max_len + self.cfg.meta_tokens
         self.caches = init_decode_caches(self.cfg, max_slots, cache_len)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode(p, t, c, pos))
+        self._decode = _cached_decode_fn(model)
 
     # -- API ---------------------------------------------------------------------
     def submit(self, req: Request) -> None:

@@ -32,7 +32,8 @@ def build_inception_like(n_blocks: int = 3, width: int = 4, d: int = 64,
             c = g.add(f"b{blk}_{b}_gemm", OpKind.GEMM, [cur], fn=fn,
                       cost=gemm_cost(tokens, d, d, 4),
                       fuse_sig=("gemm", tokens, d, d),
-                      consts=(w,) if with_payloads else ())
+                      consts=(w,) if with_payloads else (),
+                      **({"payload": "matmul"} if with_payloads else {}))
             fn2 = jax.nn.relu if with_payloads else None
             r = g.add(f"b{blk}_{b}_relu", OpKind.ELEMENTWISE, [c], fn=fn2,
                       cost=elementwise_cost(tokens * d, 4),

@@ -112,6 +112,7 @@ def test_collective_matmul_matches_dense():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.parallel.collectives import collective_matmul
+        from repro.parallel.compat import shard_map
 
         mesh = jax.make_mesh((4,), ("model",))
         m, k, n = 8, 32, 16
@@ -122,8 +123,8 @@ def test_collective_matmul_matches_dense():
         def f(x_sh, w_rep):
             return collective_matmul(x_sh, w_rep, "model")
 
-        out = jax.shard_map(f, mesh=mesh, in_specs=(P(None, "model"), P()),
-                            out_specs=P(), check_vma=False)(x, w)
+        out = shard_map(f, mesh=mesh, in_specs=(P(None, "model"), P()),
+                        out_specs=P())(x, w)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-4, atol=1e-4)
         print("OK collective matmul")
@@ -136,6 +137,7 @@ def test_quantized_psum_approximates_sum():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.parallel.collectives import quantized_psum
+        from repro.parallel.compat import shard_map
 
         mesh = jax.make_mesh((4,), ("data",))
         g = jax.random.normal(jax.random.key(0), (4, 64))
@@ -143,8 +145,8 @@ def test_quantized_psum_approximates_sum():
         def f(g_sh):
             return quantized_psum(g_sh[0], "data")
 
-        out = jax.shard_map(f, mesh=mesh, in_specs=(P("data"),),
-                            out_specs=P(), check_vma=False)(g)
+        out = shard_map(f, mesh=mesh, in_specs=(P("data"),),
+                        out_specs=P())(g)
         ref = np.asarray(g).sum(0)
         err = np.abs(np.asarray(out) - ref).max() / (np.abs(ref).max() + 1e-9)
         assert err < 0.05, err

@@ -1,7 +1,10 @@
 """Hypothesis property sweeps over kernel shape space (interpret mode)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 @settings(max_examples=15, deadline=None)
