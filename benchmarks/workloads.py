@@ -8,6 +8,9 @@ the simulator-based benchmarks (Figs. 2/5/8, Table 1).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core.graph import OpGraph, OpKind
 from repro.core.profiler import elementwise_cost, gather_cost, gemm_cost, norm_cost
 
@@ -120,15 +123,16 @@ def bert_like(batch: int = 1, seq: int = 32, n_layers: int = 12) -> OpGraph:
     return g
 
 
-def t5_like(batch: int = 1, seq: int = 32) -> OpGraph:
+def t5_like(batch: int = 1, seq: int = 32, n_layers: int = 12) -> OpGraph:
     """T5-base: 12 encoder + 12 decoder layers; the decoder adds a parallel
     cross-attention KV branch and the Arange/To/Ones-style small memory ops
-    the paper highlights as overlap fodder (Fig. 7a)."""
+    the paper highlights as overlap fodder (Fig. 7a).  ``n_layers`` trims
+    both stacks (differential tests use shallow variants)."""
     g = OpGraph("t5")
     d, dff = 768, 2048
     ids = g.add("ids", OpKind.INPUT)
     enc = g.add("enc_embed", OpKind.GATHER, [ids], cost=gather_cost(batch * seq, d))
-    for l in range(12):
+    for l in range(n_layers):
         n1 = g.add(f"e{l}_ln1", OpKind.NORM, [enc], cost=norm_cost(batch * seq * d))
         # relative position bias: tiny memory-bound ops (arange/to/ones)
         bias = g.add(f"e{l}_relbias", OpKind.GATHER, [ids],
@@ -150,7 +154,7 @@ def t5_like(batch: int = 1, seq: int = 32) -> OpGraph:
         enc = g.add(f"e{l}_res2", OpKind.ELEMENTWISE, [r1, down],
                     cost=elementwise_cost(batch * seq * d, n_in=2))
     dec = g.add("dec_embed", OpKind.GATHER, [ids], cost=gather_cost(batch * seq, d))
-    for l in range(12):
+    for l in range(n_layers):
         n1 = g.add(f"d{l}_ln1", OpKind.NORM, [dec], cost=norm_cost(batch * seq * d))
         qkv = [g.add(f"d{l}_{n}", OpKind.GEMM, [n1],
                      cost=gemm_cost(batch * seq, d, d),
@@ -188,6 +192,46 @@ PAPER_WORKLOADS = {
     "bert": bert_like,
     "t5": t5_like,
 }
+
+
+def _generic_payload(*args):
+    """Shared payload for :func:`attach_payloads`: sum the inputs, project by
+    the per-node weight, squash.  One module-level function for ALL nodes —
+    the capture stacking contract (same ``fuse_sig`` ⇒ same callable, branch
+    state in ``meta["consts"]``)."""
+    *xs, w = args
+    acc = xs[0]
+    for x in xs[1:]:
+        acc = acc + x
+    return jnp.tanh(acc @ w)
+
+
+def attach_payloads(g: OpGraph, d: int = 32, tokens: int = 4,
+                    seed: int = 0) -> OpGraph:
+    """Make a cost-only workload DAG executable for differential testing.
+
+    Every non-INPUT node gets the shared :func:`_generic_payload` with a
+    per-node ``(d, d)`` weight const and a uniform ``(tokens, d)`` value
+    shape, so the compiled executor (wave fusion, stacking, slot env) can be
+    checked against naive sequential execution on the *real paper
+    topologies*.  The analytic costs — which drive scheduling — are left
+    untouched; payload values are deliberately unrelated to them.  ``tanh``
+    keeps activations bounded through arbitrarily deep chains.
+    """
+    rng = np.random.default_rng(seed)
+    for node in g:
+        if node.kind is OpKind.INPUT:
+            node.out_shape = (tokens, d)
+            node.out_dtype = jnp.float32
+            continue
+        w = jnp.asarray(rng.standard_normal((d, d)) * (1.0 / d), jnp.float32)
+        node.fn = _generic_payload
+        node.meta["consts"] = (w,)
+        node.out_shape = (tokens, d)
+        node.out_dtype = jnp.float32
+    # fn/consts/out_shape are structural signature inputs — recompute
+    g.invalidate_signature()
+    return g
 
 
 def arch_workload(arch: str, batch: int = 1, seq: int = 32, n_layers: int = 4):

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Bench regression gate: compare a fresh benchmark run against the
+committed trajectory JSONs and fail on >threshold slowdowns.
+
+    # fresh run into a scratch dir
+    PYTHONPATH=src python -m benchmarks.run --quick --json-dir /tmp/bench
+    # gate against the committed baseline at the repo root
+    python scripts/check_bench_regression.py --old . --new /tmp/bench
+
+Watched metrics (matched per workload name, missing entries skipped):
+  BENCH_scheduler.json  workloads[].schedule_ms, overhead[].schedule_ms
+  BENCH_inference.json  workloads[].schedule_ms,
+                        workloads[].policies[*].makespan_us
+
+A metric regresses when ``new > old * (1 + threshold)`` AND the absolute
+slowdown exceeds a noise floor (wall-clock ms jitter on loaded CI boxes;
+simulated makespans are deterministic so their floor is tiny).  Exit code:
+0 clean, 1 regressions found, 2 usage/IO error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (relative threshold is the CLI flag; these are per-unit noise floors)
+MS_FLOOR = 0.5     # wall-clock timings below this delta are jitter
+US_FLOOR = 1.0     # simulated makespan (deterministic, tiny floor)
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+    except ValueError as e:
+        raise SystemExit(f"error: malformed JSON in {path}: {e}")
+
+
+def _by_workload(records: list[dict]) -> dict[str, dict]:
+    return {r.get("workload", f"#{i}"): r for i, r in enumerate(records)}
+
+
+def _check(name: str, metric: str, old: float, new: float,
+           threshold: float, floor: float) -> str | None:
+    if old is None or new is None or old <= 0:
+        return None
+    if new > old * (1.0 + threshold) and (new - old) > floor:
+        return (f"REGRESSION {name} {metric}: "
+                f"{old:.4g} -> {new:.4g} (+{(new / old - 1) * 100:.0f}%)")
+    return None
+
+
+def compare_records(old_records: list[dict], new_records: list[dict],
+                    metrics_ms: list[str], threshold: float) -> list[str]:
+    """Per-workload ms-metric comparison; returns regression messages."""
+    out = []
+    old_by = _by_workload(old_records)
+    for name, new_rec in _by_workload(new_records).items():
+        old_rec = old_by.get(name)
+        if old_rec is None:
+            continue
+        for m in metrics_ms:
+            msg = _check(name, m, old_rec.get(m), new_rec.get(m),
+                         threshold, MS_FLOOR)
+            if msg:
+                out.append(msg)
+    return out
+
+
+def compare_inference(old: dict, new: dict, threshold: float) -> list[str]:
+    out = compare_records(old.get("workloads", []), new.get("workloads", []),
+                          ["schedule_ms"], threshold)
+    old_by = _by_workload(old.get("workloads", []))
+    for name, new_rec in _by_workload(new.get("workloads", [])).items():
+        old_rec = old_by.get(name)
+        if old_rec is None:
+            continue
+        for policy, new_p in new_rec.get("policies", {}).items():
+            old_p = old_rec.get("policies", {}).get(policy)
+            if old_p is None:
+                continue
+            msg = _check(f"{name}/{policy}", "makespan_us",
+                         old_p.get("makespan_us"), new_p.get("makespan_us"),
+                         threshold, US_FLOOR)
+            if msg:
+                out.append(msg)
+    return out
+
+
+def compare_dirs(old_dir: str, new_dir: str, threshold: float) -> list[str]:
+    regressions: list[str] = []
+    old_s = _load(os.path.join(old_dir, "BENCH_scheduler.json"))
+    new_s = _load(os.path.join(new_dir, "BENCH_scheduler.json"))
+    regressions += compare_records(old_s.get("workloads", []),
+                                   new_s.get("workloads", []),
+                                   ["schedule_ms"], threshold)
+    regressions += compare_records(old_s.get("overhead", []),
+                                   new_s.get("overhead", []),
+                                   ["schedule_ms"], threshold)
+    old_i = _load(os.path.join(old_dir, "BENCH_inference.json"))
+    new_i = _load(os.path.join(new_dir, "BENCH_inference.json"))
+    regressions += compare_inference(old_i, new_i, threshold)
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--old", default=".",
+                    help="baseline dir holding committed BENCH_*.json")
+    ap.add_argument("--new", required=True,
+                    help="dir holding the fresh BENCH_*.json run")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative slowdown that fails the gate (0.20 = 20%%)")
+    args = ap.parse_args(argv)
+
+    for d in (args.old, args.new):
+        if not any(os.path.exists(os.path.join(d, f))
+                   for f in ("BENCH_scheduler.json", "BENCH_inference.json")):
+            print(f"error: no BENCH_*.json under {d}", file=sys.stderr)
+            return 2
+
+    regressions = compare_dirs(args.old, args.new, args.threshold)
+    for msg in regressions:
+        print(msg)
+    if regressions:
+        print(f"{len(regressions)} metric(s) regressed "
+              f">{args.threshold * 100:.0f}%", file=sys.stderr)
+        return 1
+    print("bench gate clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,14 @@
 """Opara core: the paper's contribution as a composable JAX module."""
 from .graph import IntensityClass, OpCost, OpGraph, OpKind, OpNode
-from .profiler import HardwareSpec, ModelProfiler, OpProfile, V5E
+from .profiler import (
+    HardwareSpec,
+    ModelProfiler,
+    OpProfile,
+    ProfileTable,
+    V5E,
+    apply_profile,
+    detach_profile,
+)
 from .stream_alloc import StreamPlan, allocate_streams, count_syncs
 from .nimble import allocate_streams_nimble
 from .launch_order import (
@@ -21,11 +29,20 @@ from .scheduler import (
     schedule,
     simulate_plan,
 )
-from .api import cache_stats, clear_caches, graph_signature, optimize, plan
+from .api import (
+    cache_stats,
+    calibrate,
+    calibration_key,
+    clear_caches,
+    graph_signature,
+    optimize,
+    plan,
+)
 
 __all__ = [
     "IntensityClass", "OpCost", "OpGraph", "OpKind", "OpNode",
-    "HardwareSpec", "ModelProfiler", "OpProfile", "V5E",
+    "HardwareSpec", "ModelProfiler", "OpProfile", "ProfileTable", "V5E",
+    "apply_profile", "detach_profile",
     "StreamPlan", "allocate_streams", "count_syncs", "allocate_streams_nimble",
     "ORDER_POLICIES", "depth_first_order", "opara_launch_order",
     "resource_only_order", "topo_order",
@@ -34,5 +51,6 @@ __all__ = [
     "CapturedGraph", "Step", "capture", "run_sequential_uncompiled",
     "ALLOC_POLICIES", "SchedulePlan", "compare_policies", "compile_plan",
     "schedule", "simulate_plan",
-    "cache_stats", "clear_caches", "graph_signature", "optimize", "plan",
+    "cache_stats", "calibrate", "calibration_key", "clear_caches",
+    "graph_signature", "optimize", "plan",
 ]

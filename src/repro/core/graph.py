@@ -136,6 +136,12 @@ class OpGraph:
         # Memoized structural node signature (compiled-plan cache key part);
         # also invalidated by add().
         self._node_sig: tuple | None = None
+        # Fingerprint of the measured-profile table currently hydrated onto
+        # node costs (None = analytic state).  Set/cleared by the profiler's
+        # apply/detach lifecycle; cache keys combine it with node_signature()
+        # so calibrated and uncalibrated plans never collide while the raw
+        # timings stay OUT of the structural signature.
+        self.calibration_fp: tuple | None = None
 
     # -- construction -------------------------------------------------------
     def add(
@@ -157,6 +163,12 @@ class OpGraph:
         self._next_id += 1
         self._topo = None       # invalidate memoized topology
         self._node_sig = None   # ... and the structural signature
+        if self.calibration_fp is not None:
+            # structural mutation invalidates any hydrated measured profile
+            # (the table no longer covers the graph) — drop back to analytic
+            for n in self.nodes.values():
+                n.cost.measured_us = None
+            self.calibration_fp = None
         self.nodes[op_id] = OpNode(
             op_id=op_id,
             name=name,
@@ -264,17 +276,22 @@ class OpGraph:
         return out
 
     def invalidate_signature(self) -> None:
-        """Must be called after mutating node costs/meta in place (e.g. a
-        measuring profiler pass writes ``measured_us``) — ``add()`` is the
-        only mutation the signature cache sees on its own."""
+        """Must be called after mutating structural node fields in place
+        (analytic costs, fusion signatures, payloads/consts) — ``add()`` is
+        the only mutation the signature cache sees on its own.  Measured
+        timings are NOT structural: the profiler's apply/detach lifecycle
+        tracks them via ``calibration_fp`` instead."""
         self._node_sig = None
 
     def node_signature(self) -> tuple:
         """Memoized structural fingerprint of every node: everything the
         scheduling pipeline reads (kind, edges, shapes, dtypes, fusion
         signature, analytic cost, payload marker, const shapes) and nothing
-        it doesn't (weight values, payload identities).  The compiled-plan
-        cache in :mod:`repro.core.api` builds its keys from this."""
+        it doesn't (weight values, payload identities, measured timings —
+        those are tracked separately via ``calibration_fp`` so hydrating a
+        measured profile does not change the graph's structural identity).
+        The compiled-plan and calibration caches in :mod:`repro.core.api`
+        build their keys from this."""
         if self._node_sig is None:
             self._node_sig = tuple(
                 (
@@ -284,7 +301,7 @@ class OpGraph:
                     str(n.out_dtype),
                     n.fuse_sig,
                     (n.cost.flops, n.cost.bytes_read, n.cost.bytes_written,
-                     n.cost.vmem_bytes, n.cost.occupancy, n.cost.measured_us),
+                     n.cost.vmem_bytes, n.cost.occupancy),
                     n.fn is None,
                     n.meta.get("payload"),
                     tuple(tuple(getattr(c, "shape", ()))
@@ -293,6 +310,25 @@ class OpGraph:
                 for n in self.nodes.values()
             )
         return self._node_sig
+
+    def input_signature(self, inputs: Mapping[int, Any]) -> tuple:
+        """Shape/dtype fingerprint of a concrete input binding — the
+        ``measured_inputs`` part of the calibration-cache key.  Two bindings
+        with identical shapes and dtypes are interchangeable for profiling
+        (operator wall time depends on geometry, not values)."""
+        sig = []
+        for i in sorted(inputs):
+            if i not in self.nodes:
+                raise ValueError(f"input binding references unknown op id {i}")
+            a = inputs[i]
+            shape = getattr(a, "shape", None)
+            dtype = getattr(a, "dtype", None)
+            if shape is None or dtype is None:
+                import numpy as _np
+                arr = _np.asarray(a)
+                shape, dtype = arr.shape, arr.dtype
+            sig.append((i, tuple(shape), str(dtype)))
+        return tuple(sig)
 
     def validate(self) -> None:
         for node in self.nodes.values():

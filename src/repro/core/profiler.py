@@ -10,6 +10,27 @@ GPU Opara profiles per-block (threads, registers, shared memory) with
   DNN inference only once"): every op payload is timed on the host device and
   ``measured_us`` recorded.  Used by the CPU wall-clock benchmarks.
 
+Measurement / mutation split (the calibration lifecycle)
+--------------------------------------------------------
+Timing and graph mutation are separate steps so measured profiles can be
+cached and re-used ("profile once", then amortize):
+
+* :meth:`ModelProfiler.measure` runs the single profiling inference and
+  returns a detachable :class:`ProfileTable` — it never touches the graph;
+* :func:`apply_profile` hydrates ``node.cost.measured_us`` from a table and
+  stamps the table's fingerprint on the graph (``graph.calibration_fp``), so
+  cache keys can distinguish calibrated from uncalibrated graphs without the
+  raw timings leaking into the *structural* signature;
+* :func:`detach_profile` reverses it, returning the graph to the analytic
+  state (and handing back the table).
+
+The calibration cache in :mod:`repro.core.api` keys tables by
+``(graph.node_signature(), graph.input_signature(inputs), hw.name)``: the
+structural graph shape, the input shapes/dtypes the profiling run saw, and
+the hardware the timings are valid for.  A structurally identical graph
+(e.g. a reloaded checkpoint) hydrates from the cache instead of re-timing.
+``profile_measured`` remains as the one-call convenience (measure + apply).
+
 The intensity classification (compute- vs memory-intensive, paper §3.3 /
 Fig. 3) falls out of arithmetic intensity vs the machine balance point.
 """
@@ -20,7 +41,6 @@ import time
 from typing import Any, Mapping
 
 import jax
-import numpy as np
 
 from .graph import IntensityClass, OpCost, OpGraph, OpNode
 
@@ -59,6 +79,52 @@ class OpProfile:
     est_us: float  # roofline-model execution time estimate
 
 
+@dataclasses.dataclass(frozen=True)
+class ProfileTable:
+    """Detachable measured-timing table — the calibration artifact.
+
+    One profiling inference produces one table; :func:`apply_profile` hydrates
+    a (structurally identical) graph from it, :func:`detach_profile` strips it
+    back off.  Hashable, so the table doubles as its own cache value and its
+    ``fingerprint`` as a plan-cache key component.
+    """
+
+    hw_name: str
+    measured_us: tuple[tuple[int, float], ...]  # (op_id, wall µs), sorted
+
+    @property
+    def fingerprint(self) -> tuple:
+        return (self.hw_name, self.measured_us)
+
+    def as_dict(self) -> dict[int, float]:
+        return dict(self.measured_us)
+
+
+def apply_profile(graph: OpGraph, table: ProfileTable) -> None:
+    """Hydrate ``measured_us`` on every timed node and stamp the graph with
+    the table's fingerprint (read by the plan/executable cache keys)."""
+    for op_id, us in table.measured_us:
+        graph.nodes[op_id].cost.measured_us = us
+    graph.calibration_fp = table.fingerprint
+
+
+def detach_profile(graph: OpGraph) -> ProfileTable | None:
+    """Strip measured timings off the graph, returning them as a table
+    (or ``None`` if the graph carries no measurements)."""
+    measured = tuple(
+        (n.op_id, n.cost.measured_us)
+        for n in graph if n.cost.measured_us is not None
+    )
+    fp = graph.calibration_fp
+    for n in graph:
+        n.cost.measured_us = None
+    graph.calibration_fp = None
+    if not measured:
+        return None
+    hw_name = fp[0] if fp else ""
+    return ProfileTable(hw_name=hw_name, measured_us=measured)
+
+
 class ModelProfiler:
     """Computes per-op profiles for an :class:`OpGraph`."""
 
@@ -86,23 +152,22 @@ class ModelProfiler:
         return out
 
     # -- measured (one inference pass, paper §3.2) ----------------------------
-    def profile_measured(
+    def measure(
         self,
         graph: OpGraph,
         inputs: Mapping[int, Any],
         repeats: int = 3,
-    ) -> dict[int, OpProfile]:
+    ) -> ProfileTable:
         """Execute the graph once op-by-op, timing each payload.
 
         ``inputs`` maps INPUT-node op_ids to concrete arrays.  The paper's
         single profiling run; we keep ``repeats`` tiny because kernel launch
-        noise on CPU is high.
+        noise on CPU is high.  Pure: the graph is NOT mutated — hydrate the
+        returned table with :func:`apply_profile` (or let the calibration
+        cache in :mod:`repro.core.api` do it).
         """
         values: dict[int, Any] = dict(inputs)
-        profiles = self.profile(graph)
-        # measured_us mutates node costs in place → the structural signature
-        # memoized on the graph (plan-cache key) must be recomputed.
-        graph.invalidate_signature()
+        measured: list[tuple[int, float]] = []
         for i in graph.topological_order():
             node = graph.nodes[i]
             if node.fn is None:
@@ -118,14 +183,20 @@ class ModelProfiler:
             for _ in range(repeats):
                 out = jax.block_until_ready(node.fn(*args))
             dt = (time.perf_counter() - t0) / repeats * 1e6
-            node.cost.measured_us = dt
-            profiles[i] = OpProfile(
-                cost=node.cost,
-                intensity=node.cost.intensity(self.hw.machine_balance),
-                est_us=max(dt, 1e-3),
-            )
+            measured.append((i, dt))
             values[i] = out
-        return profiles
+        return ProfileTable(hw_name=self.hw.name, measured_us=tuple(measured))
+
+    def profile_measured(
+        self,
+        graph: OpGraph,
+        inputs: Mapping[int, Any],
+        repeats: int = 3,
+    ) -> dict[int, OpProfile]:
+        """One-call convenience: measure, hydrate the graph, return profiles
+        (measured ops carry ``est_us = measured_us``; inputs stay analytic)."""
+        apply_profile(graph, self.measure(graph, inputs, repeats=repeats))
+        return self.profile(graph)
 
 
 # -- analytic cost constructors (used by models when emitting graphs) --------

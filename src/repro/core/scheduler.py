@@ -19,7 +19,7 @@ from .fusion import WaveSchedule, build_waves, fusion_stats
 from .graph import OpGraph
 from .launch_order import ORDER_POLICIES, validate_order
 from .nimble import allocate_streams_nimble
-from .profiler import HardwareSpec, ModelProfiler, OpProfile, V5E
+from .profiler import HardwareSpec, ModelProfiler, OpProfile, V5E, apply_profile
 from .simulator import SimConfig, SimResult, sequential_makespan, simulate
 from .stream_alloc import StreamPlan, allocate_streams, count_syncs
 
@@ -68,13 +68,18 @@ def schedule(
     max_lanes: int | None = None,
     measured_inputs: Mapping[int, Any] | None = None,
 ) -> SchedulePlan:
-    """Run the full scheduling pipeline (no compilation)."""
+    """Run the full scheduling pipeline (no compilation).
+
+    ``measured_inputs`` forces a fresh profiling inference (measure + hydrate
+    via the profiler's apply lifecycle).  This path always re-times — use
+    :func:`repro.core.api.plan`, which consults the calibration cache first,
+    when "profile once" amortization is wanted.
+    """
     graph.validate()
     profiler = ModelProfiler(hw)
     if measured_inputs is not None:
-        profiles = profiler.profile_measured(graph, measured_inputs)
-    else:
-        profiles = profiler.profile(graph)
+        apply_profile(graph, profiler.measure(graph, measured_inputs))
+    profiles = profiler.profile(graph)
 
     t0 = time.perf_counter()
     plan = ALLOC_POLICIES[alloc_policy](graph)

@@ -13,6 +13,12 @@ lowers at production scale):
 Batched decode across slots is itself operator parallelism — every slot's
 decode operators fuse into one wave, so the engine's throughput benefits
 from the same horizontal batching Opara applies inside a graph.
+
+``calibrate_schedule()`` ties the engine into the core measured-profile
+calibration cache: the engine's step graph is profiled once (real timings),
+and every subsequent engine instance / re-schedule with the same model
+structure, batch geometry and hardware hydrates from the cache instead of
+re-timing (paper §3.2, "profile each DNN inference only once").
 """
 from __future__ import annotations
 
@@ -67,7 +73,7 @@ class Request:
 
 class InferenceEngine:
     def __init__(self, model: Model, params, max_slots: int = 4,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0, calibrate: bool = False):
         self.model = model
         self.params = params
         self.cfg: ModelConfig = model.cfg
@@ -82,6 +88,43 @@ class InferenceEngine:
         cache_len = max_len + self.cfg.meta_tokens
         self.caches = init_decode_caches(self.cfg, max_slots, cache_len)
         self._decode = _cached_decode_fn(model)
+        # Measured-mode Opara schedule of this engine's step graph, filled by
+        # calibrate_schedule().  Engines for the same (model structure, batch
+        # geometry, hardware) share one measured profile via the core
+        # calibration cache — the first engine times once, later engines and
+        # re-schedules hydrate and hit the warm plan-cache path.
+        self.schedule_plan = None
+        if calibrate:
+            self.calibrate_schedule()
+
+    def calibrate_schedule(self, seq: int = 1, n_layers: int | None = None,
+                           repeats: int = 1):
+        """(Re-)schedule this engine's step graph with measured timings.
+
+        Exports the model's operator DAG at this engine's decode geometry
+        (batch = ``max_slots``), binds zero tokens as profiling inputs, and
+        plans through :func:`repro.core.api.plan` — so the single profiling
+        inference is amortized across every engine with an identical
+        signature (the paper's "profile each DNN inference only once").
+
+        The returned plan (also kept on ``self.schedule_plan``) is
+        introspection/analysis state — stream assignment, launch order and
+        waves over REAL timings for this engine's step, feeding the
+        simulator and benchmarks.  The decode hot path itself keeps
+        executing through the jitted step function (XLA already fuses the
+        batched decode); the calibration's runtime win is that re-planning
+        costs a cache lookup instead of a profiling inference.
+        """
+        from ..core import api as opara
+        from ..models.opgraph_export import build_lm_opgraph
+
+        g = build_lm_opgraph(self.cfg, batch=self.max_slots, seq=seq,
+                             params=self.params, n_layers=n_layers)
+        inputs = {n.op_id: jnp.zeros(n.out_shape, jnp.int32)
+                  for n in g if n.fn is None}
+        opara.calibrate(g, inputs, repeats=repeats)
+        self.schedule_plan = opara.plan(g)
+        return self.schedule_plan
 
     # -- API ---------------------------------------------------------------------
     def submit(self, req: Request) -> None:

@@ -3,13 +3,34 @@
 NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device;
 only the dry-run (its own process) forces 512 host devices.
 """
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.graph import OpGraph, OpKind
-from repro.core.profiler import elementwise_cost, gemm_cost, norm_cost
+from repro.core.profiler import ModelProfiler, elementwise_cost, gemm_cost, norm_cost
+
+
+@contextlib.contextmanager
+def count_measure_calls():
+    """Patch ModelProfiler.measure with a call counter (restored on exit).
+    Yields a dict whose ``n`` tracks how many profiling inferences ran —
+    the zero-re-timing assertions of the calibration-cache tests."""
+    calls = {"n": 0}
+    orig = ModelProfiler.measure
+
+    def counting(self, graph, inputs, repeats=3):
+        calls["n"] += 1
+        return orig(self, graph, inputs, repeats=repeats)
+
+    ModelProfiler.measure = counting
+    try:
+        yield calls
+    finally:
+        ModelProfiler.measure = orig
 
 
 def build_inception_like(n_blocks: int = 3, width: int = 4, d: int = 64,

@@ -1,0 +1,100 @@
+"""Bench regression gate (scripts/check_bench_regression.py): exit codes and
+metric matching over synthetic trajectory JSONs."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(REPO, "scripts", "check_bench_regression.py")
+
+
+def _write(dirpath, scheduler=None, inference=None):
+    os.makedirs(dirpath, exist_ok=True)
+    if scheduler is not None:
+        with open(os.path.join(dirpath, "BENCH_scheduler.json"), "w") as f:
+            json.dump(scheduler, f)
+    if inference is not None:
+        with open(os.path.join(dirpath, "BENCH_inference.json"), "w") as f:
+            json.dump(inference, f)
+
+
+def _run(old, new, *extra):
+    return subprocess.run(
+        [sys.executable, SCRIPT, "--old", str(old), "--new", str(new), *extra],
+        capture_output=True, text=True)
+
+
+SCHED_OK = {"workloads": [{"workload": "bert", "schedule_ms": 10.0}],
+            "overhead": [{"workload": "bert-180L", "schedule_ms": 100.0}]}
+INFER_OK = {"workloads": [{
+    "workload": "bert", "schedule_ms": 12.0,
+    "policies": {"opara": {"makespan_us": 500.0}}}]}
+
+
+def test_gate_clean_when_unchanged(tmp_path):
+    _write(tmp_path / "old", SCHED_OK, INFER_OK)
+    _write(tmp_path / "new", SCHED_OK, INFER_OK)
+    r = _run(tmp_path / "old", tmp_path / "new")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "clean" in r.stdout
+
+
+def test_gate_fails_on_schedule_ms_regression(tmp_path):
+    _write(tmp_path / "old", SCHED_OK, INFER_OK)
+    bad = json.loads(json.dumps(SCHED_OK))
+    bad["workloads"][0]["schedule_ms"] = 13.0  # +30% > 20% gate
+    _write(tmp_path / "new", bad, INFER_OK)
+    r = _run(tmp_path / "old", tmp_path / "new")
+    assert r.returncode == 1
+    assert "REGRESSION bert schedule_ms" in r.stdout
+
+
+def test_gate_fails_on_makespan_regression(tmp_path):
+    _write(tmp_path / "old", SCHED_OK, INFER_OK)
+    bad = json.loads(json.dumps(INFER_OK))
+    bad["workloads"][0]["policies"]["opara"]["makespan_us"] = 700.0
+    _write(tmp_path / "new", SCHED_OK, bad)
+    r = _run(tmp_path / "old", tmp_path / "new")
+    assert r.returncode == 1
+    assert "REGRESSION bert/opara makespan_us" in r.stdout
+
+
+def test_gate_tolerates_jitter_below_noise_floor(tmp_path):
+    """0.1ms on a 0.3ms metric is >20% relative but under the ms noise
+    floor — must not fail the gate."""
+    old = {"workloads": [{"workload": "tiny", "schedule_ms": 0.3}]}
+    new = {"workloads": [{"workload": "tiny", "schedule_ms": 0.4}]}
+    _write(tmp_path / "old", old, INFER_OK)
+    _write(tmp_path / "new", new, INFER_OK)
+    r = _run(tmp_path / "old", tmp_path / "new")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_gate_allows_improvements_and_new_workloads(tmp_path):
+    _write(tmp_path / "old", SCHED_OK, INFER_OK)
+    new = {"workloads": [
+        {"workload": "bert", "schedule_ms": 5.0},       # improvement
+        {"workload": "brand-new", "schedule_ms": 999.0},  # no baseline
+    ]}
+    _write(tmp_path / "new", new, INFER_OK)
+    r = _run(tmp_path / "old", tmp_path / "new")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_gate_threshold_flag(tmp_path):
+    _write(tmp_path / "old", SCHED_OK, INFER_OK)
+    bad = json.loads(json.dumps(SCHED_OK))
+    bad["workloads"][0]["schedule_ms"] = 11.5  # +15%
+    _write(tmp_path / "new", bad, INFER_OK)
+    assert _run(tmp_path / "old", tmp_path / "new").returncode == 0
+    assert _run(tmp_path / "old", tmp_path / "new",
+                "--threshold", "0.10").returncode == 1
+
+
+def test_gate_errors_without_baseline(tmp_path):
+    _write(tmp_path / "new", SCHED_OK, INFER_OK)
+    r = _run(tmp_path / "empty", tmp_path / "new")
+    assert r.returncode == 2

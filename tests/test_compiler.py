@@ -167,6 +167,41 @@ def test_graph_mutation_changes_signature():
     assert opara.graph_signature(g) != sig1
 
 
+def test_content_weights_key_reuses_executable_on_reload():
+    """Checkpoint-reload scenario: rebuilding the same model recreates
+    identical weight ARRAYS (new objects, same bytes).  The default identity
+    fingerprint misses; ``weights_key="content"`` reuses the executable."""
+    g1 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=5)
+    g2 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=5)
+
+    e1 = opara.optimize(g1, weights_key="content")
+    e2 = opara.optimize(g2, weights_key="content")
+    assert e1 is e2, "identical weight content must share the executable"
+    assert opara.cache_stats()["exec_hits"] == 1
+
+    # identity mode on the same pair: arrays are distinct objects → miss
+    i1 = opara.optimize(g1)
+    i2 = opara.optimize(g2)
+    assert i1 is not i2
+
+    # different weight values must NOT collide in content mode
+    g3 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=6)
+    e3 = opara.optimize(g3, weights_key="content")
+    assert e3 is not e1
+    # and the shared executable computes with the weights it closed over
+    x = jnp.ones((8, 64), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(e2({"x": x})[0]),
+        np.asarray(run_sequential_uncompiled(g1, {"x": x})[0]),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_weights_key_rejects_unknown_mode():
+    g = build_inception_like(n_blocks=1, width=2, with_payloads=True)
+    with pytest.raises(ValueError):
+        opara.optimize(g, weights_key="values")
+
+
 # -- topology cache ------------------------------------------------------------
 
 def test_topology_cache_invalidated_by_add():

@@ -1,0 +1,140 @@
+"""Differential correctness: compiled programs vs naive sequential execution.
+
+Every paper-workload topology from ``benchmarks/workloads.py`` is made
+executable via ``attach_payloads`` (real branch structure, small uniform
+payloads) and the full Opara pipeline's output is checked against plain
+topo-order op-by-op execution — in analytic and measured modes, cold and
+cache-warm.  This is the harness later perf PRs are judged against: any
+scheduling/fusion/capture change that alters program SEMANTICS fails here.
+
+Depth-parameterized workloads run shallow variants to keep the suite fast;
+the graph builders and payload attachment are identical to the full-size
+benchmarks.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api as opara, run_sequential_uncompiled
+from repro.core import detach_profile
+
+from conftest import count_measure_calls
+
+from benchmarks.workloads import (
+    attach_payloads,
+    bert_like,
+    googlenet_like,
+    inception_v3_like,
+    t5_like,
+)
+
+D, TOKENS = 32, 4
+
+# Shallow-where-possible variants of every PAPER_WORKLOADS entry.
+WORKLOADS = {
+    "googlenet": lambda: googlenet_like(1),
+    "inception-v3": lambda: inception_v3_like(1),
+    "bert": lambda: bert_like(1, seq=4, n_layers=2),
+    "t5": lambda: t5_like(1, seq=4, n_layers=2),
+}
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    opara.clear_caches()
+    yield
+    opara.clear_caches()
+
+
+def _build(name, seed=0):
+    g = attach_payloads(WORKLOADS[name](), d=D, tokens=TOKENS, seed=seed)
+    input_nodes = [n for n in g if n.fn is None]
+    x = jnp.asarray(
+        np.random.default_rng(99).standard_normal((TOKENS, D)), jnp.float32)
+    by_name = {n.name: x for n in input_nodes}
+    by_id = {n.op_id: x for n in input_nodes}
+    return g, by_name, by_id
+
+
+def _assert_matches(got, ref):
+    assert len(got) == len(ref)
+    for a, b in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_differential_analytic_cold_and_warm(name):
+    g, inputs, _ = _build(name)
+    ref = run_sequential_uncompiled(g, inputs)
+    exe_cold = opara.optimize(g)
+    _assert_matches(exe_cold(inputs), ref)
+    exe_warm = opara.optimize(g)
+    assert exe_warm is exe_cold, "warm optimize must hit the executable cache"
+    _assert_matches(exe_warm(inputs), ref)
+    stats = opara.cache_stats()
+    assert stats["plan_hits"] >= 1 and stats["exec_hits"] == 1
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_differential_measured_cold_and_warm(name):
+    g, inputs, minputs = _build(name)
+    ref = run_sequential_uncompiled(g, inputs)
+
+    # cold: one profiling inference hydrates the graph, then schedule+capture
+    opara.calibrate(g, minputs, repeats=1)
+    opara.plan(g, measured_inputs=minputs)
+    assert g.calibration_fp is not None
+    exe_cold = opara.optimize(g)
+    _assert_matches(exe_cold(inputs), ref)
+
+    # warm: same-signature re-schedule does zero re-timing
+    with count_measure_calls() as timing:
+        opara.plan(g, measured_inputs=minputs)
+        exe_warm = opara.optimize(g)
+    assert timing["n"] == 0, "warm measured schedule must not re-time"
+    assert exe_warm is exe_cold
+    _assert_matches(exe_warm(inputs), ref)
+    stats = opara.cache_stats()
+    assert stats["calib_hits"] >= 2 and stats["calib_misses"] == 1
+
+    # detaching the profile returns the graph to its analytic identity
+    table = detach_profile(g)
+    assert table is not None and g.calibration_fp is None
+    exe_analytic = opara.optimize(g)
+    assert exe_analytic is not exe_cold
+    _assert_matches(exe_analytic(inputs), ref)
+
+
+def test_calibration_survives_checkpoint_reload():
+    """A structurally identical rebuilt graph (the reloaded-checkpoint
+    scenario) hydrates from the calibration cache: zero re-timing, warm
+    plan-cache path — the acceptance criterion for this PR."""
+    g1, _, minputs = _build("bert")
+    with count_measure_calls() as timing:
+        p1 = opara.plan(g1, measured_inputs=minputs)
+        assert timing["n"] == 1
+
+        g2, inputs2, minputs2 = _build("bert")  # fresh object, same structure
+        assert g2 is not g1
+        p2 = opara.plan(g2, measured_inputs=minputs2)
+    assert timing["n"] == 1, "reloaded graph must reuse the measured profile"
+    stats = opara.cache_stats()
+    assert stats["calib_hits"] == 1 and stats["calib_misses"] == 1
+    assert stats["plan_hits"] == 1 and stats["plan_misses"] == 1
+    assert p2.graph is g2 and p2.order == p1.order
+    # hydrated timings are byte-identical to the measured originals
+    assert g2.calibration_fp == g1.calibration_fp
+    ref = run_sequential_uncompiled(g2, inputs2)
+    _assert_matches(opara.optimize(g2)(inputs2), ref)
+
+
+def test_measured_and_analytic_plans_do_not_collide():
+    """Same structure, one calibrated and one not → distinct plan entries."""
+    g1, _, minputs = _build("bert")
+    g2, _, _ = _build("bert")
+    opara.plan(g1, measured_inputs=minputs)
+    opara.plan(g2)  # analytic
+    stats = opara.cache_stats()
+    assert stats["plan_misses"] == 2 and stats["plan_hits"] == 0
+    assert opara.graph_signature(g1) != opara.graph_signature(g2)

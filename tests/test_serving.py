@@ -66,6 +66,30 @@ def test_eos_terminates(small_model):
     assert len(done) == 1 and len(done[0].output) == 1
 
 
+def test_engine_reschedule_hits_calibration_cache(small_model):
+    """First engine profiles its step graph once; a second engine (same
+    model structure + batch geometry) and an in-place re-schedule both
+    hydrate from the calibration cache — zero re-timing."""
+    from repro.core import api as opara
+    from conftest import count_measure_calls
+
+    cfg, model, params = small_model
+    opara.clear_caches()
+    try:
+        with count_measure_calls() as timing:
+            e1 = InferenceEngine(model, params, max_slots=2, max_len=32)
+            p1 = e1.calibrate_schedule(n_layers=1)
+            assert timing["n"] == 1 and p1 is e1.schedule_plan
+
+            e2 = InferenceEngine(model, params, max_slots=2, max_len=32)
+            p2 = e2.calibrate_schedule(n_layers=1)   # warm: cache-served
+            p1b = e1.calibrate_schedule(n_layers=1)  # re-schedule: also warm
+    finally:
+        opara.clear_caches()
+    assert timing["n"] == 1, "serving re-schedules must not re-time"
+    assert p2.order == p1.order == p1b.order
+
+
 def test_sampler_modes():
     logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
     assert int(sample_token(logits, jax.random.key(0))[0]) == 1  # greedy
