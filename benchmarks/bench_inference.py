@@ -7,7 +7,7 @@ import dataclasses
 import time
 
 from repro.configs import list_archs
-from repro.core import SimConfig, compare_policies, compile_plan, schedule
+from repro.core import SimConfig, autotune, compare_policies, compile_plan, schedule
 from repro.core.profiler import HardwareSpec
 
 from .workloads import PAPER_WORKLOADS, arch_workload
@@ -23,8 +23,11 @@ RECORDS: list[dict] = []
 BENCH_HW = HardwareSpec(min_kernel_us=2.0)
 # sync_us is small: event waits are captured INSIDE the graph (replay cost),
 # not host round-trips.  resource_cap = one device's occupancy budget.
+# head_of_line: non-preemptive dispatch is THE mechanism that makes the
+# operator launch order matter (paper Fig. 2 / §2.3) — on, so order and
+# packing policies actually differentiate in the trajectory JSONs.
 BENCH_SIM = SimConfig(resource_cap=128e6, sync_us=0.5, launch_us=8.0,
-                      interference_penalty=0.13)
+                      interference_penalty=0.13, head_of_line=True)
 # the RTX-2080-class device of the paper's Fig. 2: ~40% of the occupancy
 # budget and non-preemptive head-of-line dispatch — launch order matters
 # most when the pool is tight and a blocked kernel stalls later launches.
@@ -42,17 +45,35 @@ def run(batch: int = 1) -> list[str]:
         except Exception:
             continue
     for name, g in graphs.items():
-        res = compare_policies(g, hw=BENCH_HW, cfg=BENCH_SIM)
+        tuned = autotune(g, hw=BENCH_HW, cfg=BENCH_SIM)
+        res = compare_policies(g, hw=BENCH_HW, cfg=BENCH_SIM,
+                               opara_plan=tuned)
         base = res["cuda_graph_sequential"]["makespan_us"]
         t0 = time.perf_counter()
-        plan = schedule(g, "opara", "opara", hw=BENCH_HW)
+        plan = schedule(g, "opara", "opara", hw=BENCH_HW, sim_cfg=BENCH_SIM)
         t_sched = (time.perf_counter() - t0) * 1e3
         t0 = time.perf_counter()
         compile_plan(plan)
         t_capture = (time.perf_counter() - t0) * 1e3
+        # why the opara makespan moved: the tuned plan's packing efficacy
+        # (per-wave resource utilization, same-class overlap) next to the
+        # untuned single-policy plan's
+        eff_keys = ("mean_wave_resource_util", "max_wave_resource_util",
+                    "same_class_overlap_frac", "n_waves")
+        tuned_stats = tuned.stats()
+        untuned_stats = plan.stats()
         rec = {"workload": name, "n_ops": len(g),
                "schedule_ms": round(t_sched, 3),
-               "capture_ms": round(t_capture, 3), "policies": {}}
+               "capture_ms": round(t_capture, 3),
+               "autotune": dict(
+                   {k: round(tuned_stats[k], 4) for k in eff_keys},
+                   autotune_ms=round(tuned.autotune_ms, 3),
+                   n_candidates=tuned.n_candidates,
+                   alloc=tuned.alloc_policy, order=tuned.order_policy,
+                   repacked=bool(tuned.repacked),
+                   est_makespan_us=round(tuned.est_makespan_us or 0.0, 2)),
+               "untuned": {k: round(untuned_stats[k], 4) for k in eff_keys},
+               "policies": {}}
         for policy, r in res.items():
             rows.append(
                 f"{name},{policy},{r['makespan_us']:.1f},"

@@ -12,9 +12,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import ModelProfiler, V5E, compile_plan, schedule
+from repro.core import (ModelProfiler, V5E, autotune, compile_plan,
+                        estimate_makespan, schedule, simulate)
 from repro.core import api as opara
 
+from .bench_inference import BENCH_SIM
 from .workloads import bert_like
 
 # structured records picked up by benchmarks/run.py → BENCH JSON
@@ -55,7 +57,7 @@ def run() -> list[str]:
     })
 
     # -- ≥2000-op graph: program-compiler overhead + plan-cache hit ----------
-    big = bert_like(1, n_layers=180)          # 2165 ops
+    big = bert_like(1, n_layers=180)          # ~3.8k ops (21 ops/layer)
     opara.clear_caches()
     t0 = time.perf_counter()
     p_big = schedule(big, "opara", "opara")
@@ -71,13 +73,48 @@ def run() -> list[str]:
     rows.append(f"big_graph_schedule,{t_sched:.2f}")
     rows.append(f"big_graph_capture_lower,{t_lower:.2f}")
     rows.append(f"big_graph_plan_cache_hit,{t_hit:.3f}")
+
+    # -- autotune acceptance numbers: the cost model must be ≥10× cheaper
+    # than the event-driven simulator, and the full {alloc}×{order}×{repack}
+    # search must stay within ~2× of the single-policy cold path (the warm
+    # path is a plan-cache hit either way) -----------------------------------
+    t0 = time.perf_counter()
+    simulate(big, p_big.stream_plan, p_big.order, p_big.profiles, BENCH_SIM)
+    t_sim = (time.perf_counter() - t0) * 1e3
+    t_est = min(_timed(lambda: estimate_makespan(
+        big, p_big.stream_plan, p_big.order, p_big.profiles, BENCH_SIM))
+        for _ in range(3))
+    t_tune = min(_timed(lambda: autotune(big, cfg=BENCH_SIM))
+                 for _ in range(3))
+    opara.clear_caches()
+    opara.plan(big, autotune=True, sim_cfg=BENCH_SIM)   # miss: tunes once
+    t_tune_hit = min(_timed(
+        lambda: opara.plan(big, autotune=True, sim_cfg=BENCH_SIM))
+        for _ in range(3))
+    rows.append(f"big_graph_simulate,{t_sim:.2f}")
+    rows.append(f"big_graph_estimate,{t_est:.3f}")
+    rows.append(f"big_graph_estimate_speedup,{t_sim / max(t_est, 1e-9):.1f}")
+    rows.append(f"big_graph_autotune_cold,{t_tune:.2f}")
+    rows.append(f"big_graph_autotune_plan_hit,{t_tune_hit:.4f}")
     RECORDS.append({
         "workload": "bert-180L", "n_ops": len(big),
         "schedule_ms": round(t_sched, 3),
         "capture_lower_ms": round(t_lower, 3),
         "plan_cache_hit_ms": round(t_hit, 4),
+        "simulate_ms": round(t_sim, 3),
+        "estimate_ms": round(t_est, 4),
+        "estimate_speedup": round(t_sim / max(t_est, 1e-9), 1),
+        "autotune_cold_ms": round(t_tune, 3),
+        "autotune_vs_schedule": round(t_tune / max(t_sched, 1e-9), 2),
+        "autotune_plan_hit_ms": round(t_tune_hit, 5),
     })
     return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e3
 
 
 if __name__ == "__main__":

@@ -63,10 +63,29 @@ def run() -> list[str]:
 
 
 def _measured_calibration() -> list[str]:
-    """Cold vs warm measured-mode scheduling on the payload graph."""
+    """Cold vs warm measured-mode scheduling on the payload graph.
+
+    The calibration cache's disk tier is pointed at a throwaway directory:
+    a table persisted by an earlier local run would turn the cold
+    measurement into a disk hit and skew the committed trajectory."""
+    import os
+    import tempfile
     gp = build_payload_graph()
     inputs = {n.op_id: jnp.ones(n.out_shape, jnp.float32)
               for n in gp if n.fn is None}
+    old_dir = os.environ.get("REPRO_CALIB_DIR")
+    with tempfile.TemporaryDirectory(prefix="repro-calib-") as tmp:
+        os.environ["REPRO_CALIB_DIR"] = tmp
+        try:
+            return _measured_calibration_inner(gp, inputs)
+        finally:
+            if old_dir is None:
+                os.environ.pop("REPRO_CALIB_DIR", None)
+            else:
+                os.environ["REPRO_CALIB_DIR"] = old_dir
+
+
+def _measured_calibration_inner(gp, inputs) -> list[str]:
     opara.clear_caches()
     t0 = time.perf_counter()
     opara.plan(gp, measured_inputs=inputs)      # times once + schedules

@@ -70,9 +70,11 @@ def compare_records(old_records: list[dict], new_records: list[dict],
     return out
 
 
-def compare_inference(old: dict, new: dict, threshold: float) -> list[str]:
-    out = compare_records(old.get("workloads", []), new.get("workloads", []),
-                          ["schedule_ms"], threshold)
+def compare_inference(old: dict, new: dict, threshold: float,
+                      makespan_only: bool = False) -> list[str]:
+    out = [] if makespan_only else compare_records(
+        old.get("workloads", []), new.get("workloads", []),
+        ["schedule_ms"], threshold)
     old_by = _by_workload(old.get("workloads", []))
     for name, new_rec in _by_workload(new.get("workloads", [])).items():
         old_rec = old_by.get(name)
@@ -90,19 +92,21 @@ def compare_inference(old: dict, new: dict, threshold: float) -> list[str]:
     return out
 
 
-def compare_dirs(old_dir: str, new_dir: str, threshold: float) -> list[str]:
+def compare_dirs(old_dir: str, new_dir: str, threshold: float,
+                 makespan_only: bool = False) -> list[str]:
     regressions: list[str] = []
-    old_s = _load(os.path.join(old_dir, "BENCH_scheduler.json"))
-    new_s = _load(os.path.join(new_dir, "BENCH_scheduler.json"))
-    regressions += compare_records(old_s.get("workloads", []),
-                                   new_s.get("workloads", []),
-                                   ["schedule_ms"], threshold)
-    regressions += compare_records(old_s.get("overhead", []),
-                                   new_s.get("overhead", []),
-                                   ["schedule_ms"], threshold)
+    if not makespan_only:
+        old_s = _load(os.path.join(old_dir, "BENCH_scheduler.json"))
+        new_s = _load(os.path.join(new_dir, "BENCH_scheduler.json"))
+        regressions += compare_records(old_s.get("workloads", []),
+                                       new_s.get("workloads", []),
+                                       ["schedule_ms"], threshold)
+        regressions += compare_records(old_s.get("overhead", []),
+                                       new_s.get("overhead", []),
+                                       ["schedule_ms"], threshold)
     old_i = _load(os.path.join(old_dir, "BENCH_inference.json"))
     new_i = _load(os.path.join(new_dir, "BENCH_inference.json"))
-    regressions += compare_inference(old_i, new_i, threshold)
+    regressions += compare_inference(old_i, new_i, threshold, makespan_only)
     return regressions
 
 
@@ -114,6 +118,10 @@ def main(argv=None) -> int:
                     help="dir holding the fresh BENCH_*.json run")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="relative slowdown that fails the gate (0.20 = 20%%)")
+    ap.add_argument("--makespan-only", action="store_true",
+                    help="gate only the deterministic simulated makespan_us "
+                         "metrics — wall-clock ms baselines are machine-"
+                         "specific, so cross-machine runs (CI) use this")
     args = ap.parse_args(argv)
 
     for d in (args.old, args.new):
@@ -122,7 +130,8 @@ def main(argv=None) -> int:
             print(f"error: no BENCH_*.json under {d}", file=sys.stderr)
             return 2
 
-    regressions = compare_dirs(args.old, args.new, args.threshold)
+    regressions = compare_dirs(args.old, args.new, args.threshold,
+                               makespan_only=args.makespan_only)
     for msg in regressions:
         print(msg)
     if regressions:

@@ -13,19 +13,28 @@ from .stream_alloc import StreamPlan, allocate_streams, count_syncs
 from .nimble import allocate_streams_nimble
 from .launch_order import (
     ORDER_POLICIES,
+    critical_path_order,
     depth_first_order,
     opara_launch_order,
     resource_only_order,
     topo_order,
 )
-from .fusion import Wave, WaveSchedule, build_waves, fusion_stats
-from .simulator import SimConfig, SimResult, sequential_makespan, simulate
+from .fusion import Wave, WaveSchedule, build_waves, fusion_stats, repack_waves
+from .simulator import (
+    SimConfig,
+    SimResult,
+    estimate_makespan,
+    sequential_makespan,
+    simulate,
+)
 from .capture import CapturedGraph, Step, capture, run_sequential_uncompiled
 from .scheduler import (
     ALLOC_POLICIES,
     SchedulePlan,
+    autotune,
     compare_policies,
     compile_plan,
+    estimate_plan,
     schedule,
     simulate_plan,
 )
@@ -44,13 +53,14 @@ __all__ = [
     "HardwareSpec", "ModelProfiler", "OpProfile", "ProfileTable", "V5E",
     "apply_profile", "detach_profile",
     "StreamPlan", "allocate_streams", "count_syncs", "allocate_streams_nimble",
-    "ORDER_POLICIES", "depth_first_order", "opara_launch_order",
-    "resource_only_order", "topo_order",
-    "Wave", "WaveSchedule", "build_waves", "fusion_stats",
-    "SimConfig", "SimResult", "sequential_makespan", "simulate",
+    "ORDER_POLICIES", "critical_path_order", "depth_first_order",
+    "opara_launch_order", "resource_only_order", "topo_order",
+    "Wave", "WaveSchedule", "build_waves", "fusion_stats", "repack_waves",
+    "SimConfig", "SimResult", "estimate_makespan", "sequential_makespan",
+    "simulate",
     "CapturedGraph", "Step", "capture", "run_sequential_uncompiled",
-    "ALLOC_POLICIES", "SchedulePlan", "compare_policies", "compile_plan",
-    "schedule", "simulate_plan",
+    "ALLOC_POLICIES", "SchedulePlan", "autotune", "compare_policies",
+    "compile_plan", "estimate_plan", "schedule", "simulate_plan",
     "cache_stats", "calibrate", "calibration_key", "clear_caches",
     "graph_signature", "optimize", "plan",
 ]

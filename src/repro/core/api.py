@@ -8,7 +8,12 @@
 
 ``optimize`` = Alg.1 streams + profile + Alg.2 order + wave fusion + capture,
 i.e. the whole paper pipeline with one call, non-intrusively wrapping any
-operator graph.
+operator graph.  ``plan(..., autotune=True)`` / ``optimize(...,
+autotune=True)`` swap the fixed policies for the simulator-guided schedule
+search (:func:`repro.core.scheduler.autotune`); the search result is cached
+under the same plan cache (keyed by the ``sim_cfg`` cost model alongside the
+structural signature), so tuning happens once per graph structure and the
+warm path is identical to the single-policy one.
 
 Compiled-plan cache
 -------------------
@@ -35,6 +40,13 @@ fingerprint rides in :func:`graph_signature`, so calibrated and analytic
 plans for the same structure never collide.  :func:`calibrate` is the
 stand-alone entry point (e.g. to control ``repeats``).
 
+The calibration cache has a disk tier: tables are persisted as JSON under
+``$REPRO_CALIB_DIR`` (default ``~/.cache/repro/calib``), keyed by the same
+(node_signature, input_signature, hw.name) triple, so serving processes
+re-hydrate measured profiles across restarts without re-timing.
+``plan(..., load=False)`` / ``calibrate(..., load=False)`` skip the disk
+read (escape hatch for invalidated timings, e.g. after a runtime upgrade).
+
 ``optimize()`` adds a third cache level for the captured executable.  An
 executable closes over payload callables and weights, so its key is the
 plan signature PLUS a weights fingerprint of every node's ``fn`` and
@@ -55,6 +67,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
+import os
+import tempfile
 from collections import OrderedDict
 from typing import Any, Mapping
 
@@ -70,13 +85,25 @@ from .profiler import (
     apply_profile,
 )
 from .scheduler import SchedulePlan, compile_plan, schedule
+from .scheduler import autotune as autotune_schedule
+from .simulator import SimConfig
 
 _CACHE_SIZE = 64
 _plan_cache: OrderedDict[tuple, SchedulePlan] = OrderedDict()
 _exec_cache: OrderedDict[tuple, CapturedGraph] = OrderedDict()
 _calib_cache: OrderedDict[tuple, ProfileTable] = OrderedDict()
 _stats = {"plan_hits": 0, "plan_misses": 0, "exec_hits": 0, "exec_misses": 0,
-          "calib_hits": 0, "calib_misses": 0}
+          "calib_hits": 0, "calib_misses": 0, "calib_disk_hits": 0}
+
+# Disk tier of the calibration cache: ProfileTables serialized under
+# ``$REPRO_CALIB_DIR`` (default ``~/.cache/repro/calib``), one JSON file per
+# (node_signature, input_signature, hw.name) triple, so a serving process
+# restart re-hydrates measured profiles without a profiling inference.
+# Bounded: stores beyond _DISK_CACHE_MAX entries evict the oldest-mtime
+# files (a coarse LRU — loads don't bump mtime, but a serving fleet's hot
+# geometries get re-stored whenever the memory LRU cycles them).
+_CALIB_DIR_ENV = "REPRO_CALIB_DIR"
+_DISK_CACHE_MAX = 512
 
 
 def graph_signature(
@@ -85,20 +112,27 @@ def graph_signature(
     order_policy: str = "opara",
     hw: HardwareSpec = V5E,
     max_lanes: int | None = None,
+    sim_cfg: SimConfig | None = None,
 ) -> tuple:
     """Structural cache key: everything scheduling reads, nothing it doesn't.
 
     Per node: kind, edges, output shape/dtype, fusion signature, analytic
-    cost fields, payload marker and const shapes (capture's stackability
+    cost fields (including the derived ``resource_demand()`` the repacker
+    admits on), payload marker and const shapes (capture's stackability
     inputs) — see :meth:`OpGraph.node_signature`, which memoizes the node
     part per graph version.  The hydrated calibration fingerprint (if any)
     is a separate component: measured timings change schedules, but they are
-    not part of the graph's structural identity.  Weight *values* and
-    payload identities are deliberately excluded — they cannot change a
-    schedule.
+    not part of the graph's structural identity.  ``sim_cfg`` (a frozen,
+    hashable :class:`SimConfig`) joins the key for autotuned plans — the
+    cost model's resource cap and penalties steer the search, so two
+    configs must never share a tuned plan.  Weight *values* and payload
+    identities are deliberately excluded — they cannot change a schedule.
+
+    The per-node part enters as :meth:`OpGraph.signature_digest` (memoized
+    sha1 of the full node tuple) so cache probes stay O(1) in graph size.
     """
-    return (graph.node_signature(), graph.calibration_fp,
-            alloc_policy, order_policy, hw, max_lanes)
+    return (graph.signature_digest(), graph.calibration_fp,
+            alloc_policy, order_policy, hw, max_lanes, sim_cfg)
 
 
 def calibration_key(graph: OpGraph, inputs: Mapping[int, Any],
@@ -150,29 +184,106 @@ def _lru_put(cache: OrderedDict, key: tuple, value: Any) -> None:
         cache.popitem(last=False)
 
 
+def _calib_dir() -> str:
+    return os.environ.get(_CALIB_DIR_ENV) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "calib")
+
+
+def _calib_path(key: tuple) -> str:
+    digest = hashlib.sha1(repr(key).encode()).hexdigest()
+    return os.path.join(_calib_dir(), f"{digest}.json")
+
+
+def _calib_disk_load(key: tuple) -> ProfileTable | None:
+    try:
+        with open(_calib_path(key)) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if doc.get("key") != repr(key):   # sha1 collision / stale format
+        return None
+    return ProfileTable(
+        hw_name=doc["hw_name"],
+        measured_us=tuple((int(i), float(us)) for i, us in doc["measured_us"]))
+
+
+def _calib_disk_store(key: tuple, table: ProfileTable) -> None:
+    """Best-effort atomic write; serving must never fail on a full disk."""
+    tmp = None
+    try:
+        os.makedirs(_calib_dir(), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=_calib_dir(), suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump({"key": repr(key), "hw_name": table.hw_name,
+                       "measured_us": [list(m) for m in table.measured_us]}, f)
+        os.replace(tmp, _calib_path(key))
+        _calib_disk_evict()
+    except OSError:
+        if tmp is not None:   # don't strand the temp file on a full disk
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+
+def _calib_disk_evict() -> None:
+    """Drop oldest-mtime entries beyond _DISK_CACHE_MAX (runs per store —
+    rare: stores happen only on full cache misses)."""
+    d = _calib_dir()
+    try:
+        entries = [e for e in os.scandir(d) if e.name.endswith(".json")]
+        if len(entries) <= _DISK_CACHE_MAX:
+            return
+        entries.sort(key=lambda e: e.stat().st_mtime)
+        for e in entries[:len(entries) - _DISK_CACHE_MAX]:
+            try:
+                os.unlink(e.path)
+            except OSError:
+                pass
+    except OSError:
+        pass
+
+
 def calibrate(
     graph: OpGraph,
     inputs: Mapping[int, Any],
     hw: HardwareSpec = V5E,
     repeats: int = 3,
+    load: bool = True,
 ) -> ProfileTable:
     """Hydrate ``graph`` with a measured profile, timing at most once.
 
-    Cache hit → the stored table is re-applied (zero re-timing); miss → one
-    profiling inference (the paper's "profile each DNN inference only
-    once"), stored for every structurally identical graph that follows.
+    Memory-cache hit → the stored table is re-applied (zero re-timing);
+    memory miss → the disk tier is consulted (``load=False`` skips it, e.g.
+    after a kernel/runtime upgrade that invalidates persisted timings);
+    full miss → one profiling inference (the paper's "profile each DNN
+    inference only once"), stored to both tiers for every structurally
+    identical graph — including one built by a later process — that follows.
     """
     key = calibration_key(graph, inputs, hw)
     table = _lru_get(_calib_cache, key)
-    if table is None:
+    if table is not None:
+        _stats["calib_hits"] += 1            # memory-tier hit
+    elif load and (table := _calib_disk_load(key)) is not None:
+        _stats["calib_disk_hits"] += 1       # disk-tier hit (counted apart)
+        _lru_put(_calib_cache, key, table)
+    else:
         _stats["calib_misses"] += 1
         table = ModelProfiler(hw).measure(graph, inputs, repeats=repeats)
         _lru_put(_calib_cache, key, table)
-    else:
-        _stats["calib_hits"] += 1
+        _calib_disk_store(key, table)
     if graph.calibration_fp != table.fingerprint:
         apply_profile(graph, table)
     return table
+
+
+def _autotune_key_parts(sim_cfg: SimConfig | None) -> tuple[str, str, SimConfig]:
+    """The autotuned-plan cache-key normalization, shared by plan() and
+    optimize() so the executable-cache key can never drift from the
+    plan-cache key: policy slots carry a sentinel (the tuner picks the real
+    policies) and sim_cfg defaults the same way autotune_schedule does, so
+    an explicit default SimConfig() shares the implicit-None entry."""
+    return "__autotune__", "__autotune__", sim_cfg or SimConfig()
 
 
 def plan(
@@ -182,13 +293,29 @@ def plan(
     hw: HardwareSpec = V5E,
     measured_inputs: Mapping[int, Any] | None = None,
     cache: bool = True,
+    autotune: bool = False,
+    sim_cfg: SimConfig | None = None,
+    load: bool = True,
 ) -> SchedulePlan:
+    """Cached scheduling; ``autotune=True`` replaces the single-policy
+    pipeline with the simulator-guided search (``alloc_policy`` /
+    ``order_policy`` are then ignored — the tuner picks them) under
+    ``sim_cfg``'s cost model.  The search result lands in the same plan
+    cache, so the warm path costs the same ~0.04 ms either way.  ``load``
+    gates the calibration cache's disk tier (see :func:`calibrate`).
+    """
+    if autotune:
+        alloc_policy, order_policy, sim_cfg = _autotune_key_parts(sim_cfg)
     if not cache:
+        if autotune:
+            return autotune_schedule(graph, hw=hw, cfg=sim_cfg,
+                                     measured_inputs=measured_inputs)
         return schedule(graph, alloc_policy, order_policy, hw,
-                        measured_inputs=measured_inputs)
+                        measured_inputs=measured_inputs, sim_cfg=sim_cfg)
     if measured_inputs is not None:
-        calibrate(graph, measured_inputs, hw)
-    key = graph_signature(graph, alloc_policy, order_policy, hw)
+        calibrate(graph, measured_inputs, hw, load=load)
+    key = graph_signature(graph, alloc_policy, order_policy, hw,
+                          sim_cfg=sim_cfg)
     hit = _lru_get(_plan_cache, key)
     if hit is not None:
         _stats["plan_hits"] += 1
@@ -199,7 +326,10 @@ def plan(
     _stats["plan_misses"] += 1
     # measured timings (if any) are already hydrated onto node costs, so the
     # plain pipeline schedules with them — no re-timing here.
-    p = schedule(graph, alloc_policy, order_policy, hw)
+    if autotune:
+        p = autotune_schedule(graph, hw=hw, cfg=sim_cfg)
+    else:
+        p = schedule(graph, alloc_policy, order_policy, hw, sim_cfg=sim_cfg)
     _lru_put(_plan_cache, key, p)
     return p
 
@@ -213,14 +343,22 @@ def optimize(
     gemm_kernel: str = "auto",
     cache: bool = True,
     weights_key: str = "identity",
+    autotune: bool = False,
+    sim_cfg: SimConfig | None = None,
 ) -> CapturedGraph:
     if weights_key not in ("identity", "content"):
         raise ValueError(f"unknown weights_key {weights_key!r}")
-    p = plan(graph, alloc_policy, order_policy, hw, cache=cache)
+    if autotune:
+        # the executable-cache key below must stay byte-identical to the
+        # plan-cache key plan() builds internally — one shared normalizer
+        alloc_policy, order_policy, sim_cfg = _autotune_key_parts(sim_cfg)
+    p = plan(graph, alloc_policy, order_policy, hw, cache=cache,
+             autotune=autotune, sim_cfg=sim_cfg)
     if not cache:
         return compile_plan(p, output_ids=output_ids, gemm_kernel=gemm_kernel)
     key = (
-        graph_signature(graph, alloc_policy, order_policy, hw),
+        graph_signature(graph, alloc_policy, order_policy, hw,
+                        sim_cfg=sim_cfg),
         weights_key,
         _weights_fingerprint(graph, weights_key),
         tuple(output_ids) if output_ids is not None else None,

@@ -201,6 +201,30 @@ def _branch_gemm_step() -> Callable[..., Any]:
     return fused
 
 
+def _validate_waves(graph: OpGraph, schedule: WaveSchedule) -> None:
+    """The capturer's input contract, packer-agnostic: waves must partition
+    the graph and every producer must sit in a strictly earlier wave.  Both
+    :func:`repro.core.fusion.build_waves` and ``repack_waves`` guarantee
+    this; the check catches hand-built or corrupted schedules before they
+    lower into a program that reads uninitialized slots."""
+    wave_of: dict[int, int] = {}
+    for w in schedule.waves:
+        for op in w.op_ids:
+            if op in wave_of:
+                raise ValueError(f"op {op} appears in waves {wave_of[op]} "
+                                 f"and {w.index}")
+            wave_of[op] = w.index
+    if set(wave_of) != set(graph.nodes):
+        missing = set(graph.nodes) - set(wave_of)
+        raise ValueError(f"wave schedule does not cover ops {sorted(missing)[:5]}")
+    for node in graph:
+        for p in node.inputs:
+            if wave_of[p] >= wave_of[node.op_id]:
+                raise ValueError(
+                    f"dependency {p}->{node.op_id} not satisfied: producer in "
+                    f"wave {wave_of[p]}, consumer in wave {wave_of[node.op_id]}")
+
+
 def _lower(
     graph: OpGraph,
     schedule: WaveSchedule,
@@ -287,6 +311,7 @@ def capture(
     if gemm_kernel not in ("auto", "pallas", "vmap"):
         raise ValueError(f"unknown gemm_kernel {gemm_kernel!r}")
     graph.validate()
+    _validate_waves(graph, schedule)
     input_ids = [n.op_id for n in graph if n.fn is None]
     if output_ids is None:
         output_ids = graph.leaves()

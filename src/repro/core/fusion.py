@@ -14,12 +14,27 @@ independent by construction.
 Fusion groups: within a wave, ops sharing ``fuse_sig`` (same kind + same
 operand shapes/dtype) form one group executed as a single stacked op by the
 capturer (or routed to the `branch_gemm` Pallas kernel on TPU).
+
+Two packers:
+
+* :func:`build_waves` — launch-order bucketing capped by lane count only
+  (the historical packer; still the ``repack=False`` baseline the autotuner
+  compares against);
+* :func:`repack_waves` — resource- and interference-aware: a wave admits an
+  op only while the wave's summed ``resource_demand()`` stays under
+  ``SimConfig.resource_cap``, and ready ops are drawn alternately from the
+  memory- and compute-intensive pools (greedy complementary fill) so
+  co-resident ops mix intensity classes and the simulator's same-class
+  interference penalty stops firing on every wave.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
-from .graph import OpGraph
+from .graph import IntensityClass, OpGraph
+from .profiler import OpProfile
+from .simulator import SimConfig
 from .stream_alloc import StreamPlan
 
 
@@ -90,6 +105,103 @@ def build_waves(
     return WaveSchedule(waves=waves)
 
 
+def repack_waves(
+    graph: OpGraph,
+    plan: StreamPlan,
+    order: list[int],
+    profiles: dict[int, OpProfile],
+    cfg: SimConfig = SimConfig(),
+    max_lanes: int | None = None,
+) -> WaveSchedule:
+    """Resource- and interference-aware wave repacking.
+
+    Waves are built one at a time from the ready frontier (ops whose
+    producers all sit in *closed* waves), so dependencies hold by
+    construction.  Admission into the open wave requires the wave's summed
+    ``resource_demand()`` to stay under ``cfg.resource_cap`` (an op whose
+    demand alone exceeds the cap gets a wave to itself — the simulator's
+    empty-device admission rule).  Ready ops live in two pools keyed by
+    intensity class; each draw prefers the class that balances the wave
+    (greedy complementary fill), with the launch order breaking ties inside
+    a pool — so Algorithm 2's resource-ascending order survives within each
+    class while waves deliberately mix classes.
+
+    Fusion groups are recomputed per repacked wave: same-signature ops that
+    still co-reside stack into one kernel; ops a resource boundary separated
+    fall back to per-branch steps in the capturer automatically.
+    """
+    if max_lanes is None:
+        max_lanes = max(plan.n_streams, 1)
+    cap = cfg.resource_cap
+    indeg = graph.indegree_map()
+    succ = graph.unique_successors_map()
+
+    # hot-loop precompute on dense op-id-indexed lists: the autotuner repacks
+    # the same graph once per order candidate, so per-op attribute chases and
+    # dict hashing add up on large graphs
+    n = len(graph.nodes)
+    pos = [0] * n
+    for k, op in enumerate(order):
+        pos[op] = k
+    demand = [0.0] * n
+    is_mem = [False] * n
+    for op, p in profiles.items():
+        demand[op] = p.cost.resource_demand()
+        is_mem[op] = p.intensity is IntensityClass.MEMORY
+    pool_mem: list[tuple[int, int]] = []
+    pool_comp: list[tuple[int, int]] = []
+
+    def push(op: int) -> None:
+        heapq.heappush(pool_mem if is_mem[op] else pool_comp, (pos[op], op))
+
+    for op, d in indeg.items():
+        if d == 0:
+            push(op)
+
+    waves: list[Wave] = []
+    while pool_mem or pool_comp:
+        wave_ops: list[int] = []
+        used = 0.0
+        n_mem = n_comp = 0
+        skipped_mem: list[tuple[int, int]] = []
+        skipped_comp: list[tuple[int, int]] = []
+        while len(wave_ops) < max_lanes:
+            # complementary fill: draw from the class the wave has fewer of
+            if n_mem <= n_comp:
+                pool = pool_mem if pool_mem else pool_comp
+            else:
+                pool = pool_comp if pool_comp else pool_mem
+            if not pool:
+                break
+            item = heapq.heappop(pool)
+            op = item[1]
+            mem = is_mem[op]
+            if wave_ops and used + demand[op] > cap:
+                # does not fit — defer to the next wave
+                (skipped_mem if mem else skipped_comp).append(item)
+                continue
+            wave_ops.append(op)
+            used += demand[op]
+            if mem:
+                n_mem += 1
+            else:
+                n_comp += 1
+        for item in skipped_mem:
+            heapq.heappush(pool_mem, item)
+        for item in skipped_comp:
+            heapq.heappush(pool_comp, item)
+        # close the wave: successors of its ops become ready for the next
+        wave_ops.sort(key=pos.__getitem__)   # list.__getitem__: op -> rank
+        waves.append(Wave(index=len(waves), op_ids=wave_ops,
+                          fusion_groups=_group(graph, wave_ops)))
+        for op in wave_ops:
+            for s in succ[op]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    push(s)
+    return WaveSchedule(waves=waves)
+
+
 def _group(graph: OpGraph, ops: list[int]) -> list[list[int]]:
     groups: dict[object, list[int]] = {}
     singles: list[list[int]] = []
@@ -102,12 +214,51 @@ def _group(graph: OpGraph, ops: list[int]) -> list[list[int]]:
     return list(groups.values()) + singles
 
 
-def fusion_stats(sched: WaveSchedule) -> dict[str, float]:
+def fusion_stats(
+    sched: WaveSchedule,
+    profiles: dict[int, OpProfile] | None = None,
+    resource_cap: float | None = None,
+) -> dict[str, float]:
+    """Packing statistics; with ``profiles`` also repack-efficacy metrics.
+
+    ``mean/max_wave_resource_util`` — per-wave summed ``resource_demand()``
+    over ``resource_cap`` (how full the pool is packed; >1 on a single-op
+    wave means an op that alone exceeds the cap).  ``same_class_overlap_frac``
+    — fraction of ops in multi-op waves that share the wave with another op
+    of their own intensity class, i.e. how often the simulator's same-class
+    interference penalty fires; the repacker's complementary fill drives it
+    down.
+    """
     n_ops = sum(len(w.op_ids) for w in sched.waves)
-    return {
+    out = {
         "n_ops": float(n_ops),
         "n_waves": float(sched.n_waves),
         "n_kernels_after_fusion": float(sched.n_fused_kernels),
         "mean_wave_width": n_ops / max(sched.n_waves, 1),
         "fusion_ratio": n_ops / max(sched.n_fused_kernels, 1),
     }
+    if profiles is None:
+        return out
+    if resource_cap is None:
+        resource_cap = SimConfig().resource_cap
+    utils: list[float] = []
+    n_overlapped = 0
+    n_in_multi = 0
+    for w in sched.waves:
+        utils.append(
+            sum(profiles[o].cost.resource_demand() for o in w.op_ids)
+            / max(resource_cap, 1e-9))
+        if len(w.op_ids) < 2:
+            continue
+        n_in_multi += len(w.op_ids)
+        per_class = {}
+        for o in w.op_ids:
+            c = profiles[o].intensity
+            per_class[c] = per_class.get(c, 0) + 1
+        n_overlapped += sum(k for k in per_class.values() if k >= 2)
+    out.update(
+        mean_wave_resource_util=sum(utils) / max(len(utils), 1),
+        max_wave_resource_util=max(utils, default=0.0),
+        same_class_overlap_frac=n_overlapped / max(n_in_multi, 1),
+    )
+    return out

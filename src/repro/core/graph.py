@@ -134,8 +134,11 @@ class OpGraph:
         # O(k·(V+E)) with k = number of stages.  Invalidated by add().
         self._topo: _Topology | None = None
         # Memoized structural node signature (compiled-plan cache key part);
-        # also invalidated by add().
+        # also invalidated by add().  _sig_digest is its sha1 — cache keys
+        # embed the digest so probing the plan/executable LRUs does not
+        # re-hash a multi-thousand-entry nested tuple per lookup.
         self._node_sig: tuple | None = None
+        self._sig_digest: str | None = None
         # Fingerprint of the measured-profile table currently hydrated onto
         # node costs (None = analytic state).  Set/cleared by the profiler's
         # apply/detach lifecycle; cache keys combine it with node_signature()
@@ -163,6 +166,7 @@ class OpGraph:
         self._next_id += 1
         self._topo = None       # invalidate memoized topology
         self._node_sig = None   # ... and the structural signature
+        self._sig_digest = None
         if self.calibration_fp is not None:
             # structural mutation invalidates any hydrated measured profile
             # (the table no longer covers the graph) — drop back to analytic
@@ -282,6 +286,7 @@ class OpGraph:
         timings are NOT structural: the profiler's apply/detach lifecycle
         tracks them via ``calibration_fp`` instead."""
         self._node_sig = None
+        self._sig_digest = None
 
     def node_signature(self) -> tuple:
         """Memoized structural fingerprint of every node: everything the
@@ -300,8 +305,14 @@ class OpGraph:
                     n.out_shape,
                     str(n.out_dtype),
                     n.fuse_sig,
+                    # analytic cost fields + resource_demand(), the scalar
+                    # the wave repacker admits on.  Redundant with occupancy/
+                    # vmem_bytes TODAY, but pinned explicitly so a future
+                    # resource_demand() reading inputs outside this tuple
+                    # cannot silently escape the plan/autotune cache keys.
                     (n.cost.flops, n.cost.bytes_read, n.cost.bytes_written,
-                     n.cost.vmem_bytes, n.cost.occupancy),
+                     n.cost.vmem_bytes, n.cost.occupancy,
+                     n.cost.resource_demand()),
                     n.fn is None,
                     n.meta.get("payload"),
                     tuple(tuple(getattr(c, "shape", ()))
@@ -310,6 +321,20 @@ class OpGraph:
                 for n in self.nodes.values()
             )
         return self._node_sig
+
+    def signature_digest(self) -> str:
+        """Memoized sha1 of :meth:`node_signature` — the compact component
+        plan/executable cache keys embed.  Probing an LRU hashes the whole
+        key; on multi-thousand-op graphs hashing the raw nested tuple costs
+        ~1 ms per probe, so keys carry this 40-char digest instead (the full
+        tuple remains the calibration cache's key part, where its repr also
+        serves as the on-disk collision check)."""
+        if self._sig_digest is None:
+            import hashlib
+
+            self._sig_digest = hashlib.sha1(
+                repr(self.node_signature()).encode()).hexdigest()
+        return self._sig_digest
 
     def input_signature(self, inputs: Mapping[int, Any]) -> tuple:
         """Shape/dtype fingerprint of a concrete input binding — the

@@ -109,12 +109,40 @@ def largest_first_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[
     return out
 
 
+def critical_path_order(graph: OpGraph, profiles: dict[int, OpProfile]) -> list[int]:
+    """HEFT-style upward-rank order: among ready ops, launch the one with the
+    longest remaining critical path (by ``est_us``) first.  A classic
+    list-scheduling baseline the autotuner searches alongside Alg. 2 — it
+    wins when the makespan is chain-dominated rather than interference- or
+    resource-dominated."""
+    succ = graph.unique_successors_map()
+    rank: dict[int, float] = {}
+    for i in reversed(graph.topological_order()):
+        rank[i] = profiles[i].est_us + max(
+            (rank[s] for s in succ[i]), default=0.0)
+    indeg = graph.indegree_map()
+    heap: list[tuple[float, int]] = []
+    for i, d in indeg.items():
+        if d == 0:
+            heapq.heappush(heap, (-rank[i], i))
+    out: list[int] = []
+    while heap:
+        _, i = heapq.heappop(heap)
+        out.append(i)
+        for s in succ[i]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(heap, (-rank[s], s))
+    return out
+
+
 ORDER_POLICIES = {
     "opara": opara_launch_order,
     "topo": topo_order,
     "depth_first": depth_first_order,
     "resource_only": resource_only_order,
     "largest_first": largest_first_order,
+    "critical_path": critical_path_order,
 }
 
 

@@ -32,17 +32,27 @@ the hardware the timings are valid for.  A structurally identical graph
 ``profile_measured`` remains as the one-call convenience (measure + apply).
 
 The intensity classification (compute- vs memory-intensive, paper §3.3 /
-Fig. 3) falls out of arithmetic intensity vs the machine balance point.
+Fig. 3) is kind-aware: the paper classifies operators *offline by profiled
+metrics*, which at framework granularity separates MXU-engaging kinds
+(GEMM / conv / attention / scan) from HBM-streaming ones (element-wise,
+norm, gather).  A pure arithmetic-intensity-vs-ridge-point test misfires at
+inference scale — the v5e ridge is ~240 FLOP/byte, which no batch-1
+operator reaches, so every op would land in one class and Algorithm 2's
+alternation (and the wave repacker's complementary fill) would have nothing
+to mix.  MXU kinds therefore classify COMPUTE once their analytic intensity
+clears :data:`COMPUTE_AI_FLOOR` (degenerate skinny GEMMs stay memory-bound);
+everything else falls back to the roofline test.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Mapping
 
 import jax
 
-from .graph import IntensityClass, OpCost, OpGraph, OpNode
+from .graph import IntensityClass, OpCost, OpGraph, OpKind, OpNode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,9 +102,16 @@ class ProfileTable:
     hw_name: str
     measured_us: tuple[tuple[int, float], ...]  # (op_id, wall µs), sorted
 
-    @property
+    @functools.cached_property
     def fingerprint(self) -> tuple:
-        return (self.hw_name, self.measured_us)
+        """Compact identity: (hw_name, sha1-of-timings, n).  Plan/executable
+        cache keys embed this for every calibrated graph, so it must stay
+        O(1) to hash — a raw per-op timing tuple would put O(n) floats back
+        into every warm-path cache probe."""
+        import hashlib
+
+        digest = hashlib.sha1(repr(self.measured_us).encode()).hexdigest()
+        return (self.hw_name, digest, len(self.measured_us))
 
     def as_dict(self) -> dict[int, float]:
         return dict(self.measured_us)
@@ -125,6 +142,15 @@ def detach_profile(graph: OpGraph) -> ProfileTable | None:
     return ProfileTable(hw_name=hw_name, measured_us=measured)
 
 
+# Operator kinds that engage the MXU / systolic pipeline — the paper's
+# compute-intensive population at framework granularity.
+_COMPUTE_KINDS = frozenset(
+    {OpKind.GEMM, OpKind.CONV, OpKind.ATTENTION, OpKind.SCAN})
+# Analytic FLOP/byte below which even an MXU kind is bandwidth-bound
+# (skinny batch-1 GEMMs, tiny score matmuls).
+COMPUTE_AI_FLOOR = 16.0
+
+
 class ModelProfiler:
     """Computes per-op profiles for an :class:`OpGraph`."""
 
@@ -138,6 +164,13 @@ class ModelProfiler:
         t_m = cost.bytes_total / self.hw.hbm_bw
         return max(max(t_c, t_m) * 1e6, self.hw.min_kernel_us)
 
+    def classify(self, node: OpNode) -> IntensityClass:
+        """Kind-aware intensity classification (paper §3.3, see module doc)."""
+        if (node.kind in _COMPUTE_KINDS
+                and node.cost.arithmetic_intensity() >= COMPUTE_AI_FLOOR):
+            return IntensityClass.COMPUTE
+        return node.cost.intensity(self.hw.machine_balance)
+
     def profile(self, graph: OpGraph) -> dict[int, OpProfile]:
         out: dict[int, OpProfile] = {}
         for node in graph:
@@ -146,7 +179,7 @@ class ModelProfiler:
                 est = self.roofline_us(node.cost)
             out[node.op_id] = OpProfile(
                 cost=node.cost,
-                intensity=node.cost.intensity(self.hw.machine_balance),
+                intensity=self.classify(node),
                 est_us=max(est, 1e-3),
             )
         return out

@@ -1,26 +1,42 @@
-"""End-to-end Opara pipeline (paper Fig. 4).
+"""End-to-end Opara pipeline (paper Fig. 4) plus the autotune loop.
 
 DNN model + inputs → Stream Allocator → Model Profiler → Operator Launcher
-→ Graph Capturer → parallelized executable.
+→ Wave (Re)packer → Graph Capturer → parallelized executable.
 
-``schedule()`` is the core entry point; :mod:`repro.core.api` wraps it for
-user models.  Every stage is swappable so benchmarks can mix and match
-(e.g. Nimble streams + topo order = the Nimble baseline; one stream + topo
-order = sequential CUDA Graph baseline).
+``schedule()`` is the single-policy entry point; :func:`autotune` closes the
+loop on predicted makespan: it evaluates the cross-product of
+{alloc policies} × {order policies} × {repack on/off} against the
+simulator's fast cost model (:func:`repro.core.simulator.estimate_makespan`)
+and returns the min-makespan plan — the IOS insight (cost-model-guided
+inter-operator schedule search) kept off the inference critical path the
+Nimble way, by hiding the search behind the plan cache in
+:mod:`repro.core.api`.
+
+Every stage is swappable so benchmarks can mix and match (e.g. Nimble
+streams + topo order = the Nimble baseline; one stream + topo order =
+sequential CUDA Graph baseline).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Mapping
+from typing import Any, Iterable, Mapping
 
 from .capture import CapturedGraph, capture
-from .fusion import WaveSchedule, build_waves, fusion_stats
+from .fusion import WaveSchedule, build_waves, fusion_stats, repack_waves
 from .graph import OpGraph
 from .launch_order import ORDER_POLICIES, validate_order
 from .nimble import allocate_streams_nimble
 from .profiler import HardwareSpec, ModelProfiler, OpProfile, V5E, apply_profile
-from .simulator import SimConfig, SimResult, sequential_makespan, simulate
+from .simulator import (
+    SimConfig,
+    SimResult,
+    _sweep,
+    estimate_makespan,
+    op_tables,
+    sequential_makespan,
+    simulate,
+)
 from .stream_alloc import StreamPlan, allocate_streams, count_syncs
 
 
@@ -37,19 +53,31 @@ class SchedulePlan:
     order_policy: str
     alloc_time_ms: float
     order_time_ms: float
+    # -- autotune / repack bookkeeping --------------------------------------
+    repacked: bool = False                  # waves came from repack_waves
+    sim_cfg: SimConfig | None = None        # cost-model config used, if any
+    est_makespan_us: float | None = None    # winning candidate's estimate
+    autotune_ms: float = 0.0                # search wall time (0 = no search)
+    n_candidates: int = 1                   # schedules evaluated
 
     @property
     def n_streams(self) -> int:
         return self.stream_plan.n_streams
 
     def stats(self) -> dict[str, float]:
-        s = fusion_stats(self.waves)
+        cap = (self.sim_cfg or SimConfig()).resource_cap
+        s = fusion_stats(self.waves, self.profiles, resource_cap=cap)
         s.update(
             n_streams=float(self.n_streams),
             n_syncs=float(count_syncs(self.graph, self.stream_plan)),
             alloc_time_ms=self.alloc_time_ms,
             order_time_ms=self.order_time_ms,
+            repacked=float(self.repacked),
+            autotune_ms=self.autotune_ms,
+            n_candidates=float(self.n_candidates),
         )
+        if self.est_makespan_us is not None:
+            s["est_makespan_us"] = self.est_makespan_us
         return s
 
 
@@ -59,6 +87,14 @@ ALLOC_POLICIES = {
     "sequential": lambda g: StreamPlan(stream_of={i: 0 for i in g.nodes}, n_streams=1),
 }
 
+# Default autotune search space.  Above the op limit the cold-path budget
+# (autotune ≤ ~2× a single-policy schedule) trims the space: Nimble's
+# min-path-cover allocator is O(n³), and the order list drops to the two
+# strongest candidates (the caller can always pass a wider space).
+AUTOTUNE_ORDER_POLICIES = ("opara", "topo", "critical_path")
+AUTOTUNE_ORDER_POLICIES_LARGE = ("opara", "topo")
+NIMBLE_ALLOC_OP_LIMIT = 512
+
 
 def schedule(
     graph: OpGraph,
@@ -67,6 +103,8 @@ def schedule(
     hw: HardwareSpec = V5E,
     max_lanes: int | None = None,
     measured_inputs: Mapping[int, Any] | None = None,
+    repack: bool = False,
+    sim_cfg: SimConfig | None = None,
 ) -> SchedulePlan:
     """Run the full scheduling pipeline (no compilation).
 
@@ -74,6 +112,11 @@ def schedule(
     via the profiler's apply lifecycle).  This path always re-times — use
     :func:`repro.core.api.plan`, which consults the calibration cache first,
     when "profile once" amortization is wanted.
+
+    ``repack=True`` swaps the launch-order wave bucketing for the resource-
+    and interference-aware repacker (:func:`repro.core.fusion.repack_waves`)
+    under ``sim_cfg``'s resource cap; the launch order is then re-linearized
+    wave-major so the dispatch sequence matches what was packed.
     """
     graph.validate()
     profiler = ModelProfiler(hw)
@@ -92,7 +135,13 @@ def schedule(
 
     if alloc_policy == "sequential":
         max_lanes = 1
-    waves = build_waves(graph, plan, order, max_lanes=max_lanes)
+    if repack:
+        waves = repack_waves(graph, plan, order, profiles,
+                             cfg=sim_cfg or SimConfig(), max_lanes=max_lanes)
+        order = waves.flat_order()
+        validate_order(graph, order)
+    else:
+        waves = build_waves(graph, plan, order, max_lanes=max_lanes)
     return SchedulePlan(
         graph=graph,
         stream_plan=plan,
@@ -103,7 +152,109 @@ def schedule(
         order_policy=order_policy,
         alloc_time_ms=t_alloc,
         order_time_ms=t_order,
+        repacked=repack,
+        sim_cfg=sim_cfg,
     )
+
+
+def autotune(
+    graph: OpGraph,
+    hw: HardwareSpec = V5E,
+    cfg: SimConfig | None = None,
+    alloc_policies: Iterable[str] | None = None,
+    order_policies: Iterable[str] | None = None,
+    repack_options: Iterable[bool] = (False, True),
+    max_lanes: int | None = None,
+    measured_inputs: Mapping[int, Any] | None = None,
+) -> SchedulePlan:
+    """Simulator-guided schedule search: pick the min-predicted-makespan
+    plan from {alloc} × {order} × {repack on/off}.
+
+    Work is shared across candidates — the graph is profiled once, each
+    allocator and each order run once — so the search costs one pipeline
+    pass plus a wave-build + cost-model sweep per candidate.  The result is
+    an ordinary :class:`SchedulePlan` (with ``est_makespan_us`` /
+    ``autotune_ms`` / ``n_candidates`` filled in), cacheable under the plan
+    cache exactly like a single-policy schedule.
+    """
+    graph.validate()
+    cfg = cfg or SimConfig()
+    repack_options = tuple(repack_options)   # membership-tested twice below
+    profiler = ModelProfiler(hw)
+    if measured_inputs is not None:
+        apply_profile(graph, profiler.measure(graph, measured_inputs))
+    t_search0 = time.perf_counter()
+    profiles = profiler.profile(graph)
+
+    small = len(graph) <= NIMBLE_ALLOC_OP_LIMIT
+    if alloc_policies is None:
+        alloc_policies = ("opara", "nimble") if small else ("opara",)
+    if order_policies is None:
+        order_policies = (AUTOTUNE_ORDER_POLICIES if small
+                          else AUTOTUNE_ORDER_POLICIES_LARGE)
+
+    allocs: dict[str, tuple[StreamPlan, float]] = {}
+    for ap in alloc_policies:
+        t0 = time.perf_counter()
+        allocs[ap] = (ALLOC_POLICIES[ap](graph),
+                      (time.perf_counter() - t0) * 1e3)
+    orders: dict[str, tuple[list[int], float]] = {}
+    for op_ in order_policies:
+        t0 = time.perf_counter()
+        order = ORDER_POLICIES[op_](graph, profiles)
+        orders[op_] = (order, (time.perf_counter() - t0) * 1e3)
+        validate_order(graph, order)
+
+    # Evaluate candidates on (streams, order) alone — the cost model never
+    # reads waves, so the wave build (the costliest per-candidate step) is
+    # deferred to the single winner.  Repacked candidates are the exception:
+    # repacking IS a wave build, and its flat order is what gets estimated.
+    # Above the op limit the repack leg is staged: plain sweeps rank the
+    # orders first and only the most promising one is repacked, keeping the
+    # whole search inside the ~2×-single-policy cold budget.
+    best: tuple[float, str, str, bool, Any, list[int], WaveSchedule | None] | None = None
+    n_candidates = 0
+
+    def consider(est, ap, op_, rp, splan, cand_order, waves) -> None:
+        nonlocal best, n_candidates
+        n_candidates += 1
+        if best is None or est < best[0]:
+            best = (est, ap, op_, rp, splan, cand_order, waves)
+
+    for ap, (splan, t_alloc) in allocs.items():
+        tables = op_tables(graph, splan, profiles)   # one prefetch per alloc
+        plain_best: tuple[float, str] | None = None
+        if False in repack_options:
+            for op_, (order, t_order) in orders.items():
+                est = _sweep(tables, order, cfg)
+                consider(est, ap, op_, False, splan, order, None)
+                if plain_best is None or est < plain_best[0]:
+                    plain_best = (est, op_)
+        if True in repack_options:
+            if small:
+                repack_orders = list(orders)
+            elif plain_best is not None:
+                repack_orders = [plain_best[1]]
+            else:
+                repack_orders = list(orders)[:1]
+            for op_ in repack_orders:
+                order = orders[op_][0]
+                waves = repack_waves(graph, splan, order, profiles,
+                                     cfg=cfg, max_lanes=max_lanes)
+                cand_order: list[int] = waves.flat_order()
+                est = _sweep(tables, cand_order, cfg)
+                consider(est, ap, op_, True, splan, cand_order, waves)
+    assert best is not None, "autotune needs a non-empty candidate space"
+    est, ap, op_, rp, splan, cand_order, waves = best
+    if waves is None:
+        waves = build_waves(graph, splan, cand_order, max_lanes=max_lanes)
+    return SchedulePlan(
+        graph=graph, stream_plan=splan, order=cand_order, waves=waves,
+        profiles=profiles, alloc_policy=ap, order_policy=op_,
+        alloc_time_ms=allocs[ap][1], order_time_ms=orders[op_][1],
+        repacked=rp, sim_cfg=cfg, est_makespan_us=est,
+        autotune_ms=(time.perf_counter() - t_search0) * 1e3,
+        n_candidates=n_candidates)
 
 
 def compile_plan(plan: SchedulePlan, output_ids=None, donate_inputs=False,
@@ -116,14 +267,25 @@ def simulate_plan(plan: SchedulePlan, cfg: SimConfig = SimConfig()) -> SimResult
     return simulate(plan.graph, plan.stream_plan, plan.order, plan.profiles, cfg)
 
 
+def estimate_plan(plan: SchedulePlan, cfg: SimConfig = SimConfig()) -> float:
+    """Cost-model makespan of an existing plan (the autotuner's objective)."""
+    return estimate_makespan(plan.graph, plan.stream_plan, plan.order,
+                             plan.profiles, cfg)
+
+
 def compare_policies(
     graph: OpGraph,
     hw: HardwareSpec = V5E,
     cfg: SimConfig = SimConfig(),
+    opara_plan: SchedulePlan | None = None,
 ) -> dict[str, dict[str, float]]:
     """The paper's four-way comparison on one graph (Fig. 5a analogue).
 
-    Returns {policy: {makespan_us, speedup_vs_sequential, n_streams, ...}}.
+    The ``opara`` row is the full closed-loop pipeline — autotuned over
+    {alloc} × {order} × {repack} — simulated under the same config as the
+    baselines.  Callers that already ran the search (e.g. benchmarks also
+    reporting the tuned plan's packing stats) pass it as ``opara_plan`` so
+    it is not repeated.  Returns {policy: {makespan_us, ...}}.
     """
     results: dict[str, dict[str, float]] = {}
     seq_plan = schedule(graph, "sequential", "topo", hw)
@@ -136,12 +298,13 @@ def compare_policies(
         "makespan_us": t_seq,
         "speedup_vs_eager": t_seq_nograph / t_seq,
     }
-    for name, alloc, order in [
-        ("nimble", "nimble", "topo"),
-        ("opara", "opara", "opara"),
-    ]:
-        p = schedule(graph, alloc, order, hw)
-        r = simulate_plan(p, cfg)
+    plans = {
+        "nimble": schedule(graph, "nimble", "topo", hw),
+        "opara": opara_plan if opara_plan is not None
+        else autotune(graph, hw=hw, cfg=cfg),
+    }
+    for name, p in plans.items():
+        r = simulate(graph, p.stream_plan, p.order, p.profiles, cfg)
         results[name] = {
             "makespan_us": r.makespan_us,
             "speedup_vs_eager": t_seq_nograph / r.makespan_us,
@@ -150,4 +313,12 @@ def compare_policies(
             "n_syncs": float(r.n_syncs),
             "utilization": r.utilization(max(p.n_streams, 1)),
         }
+        if name == "opara":
+            results[name].update(
+                repacked=float(p.repacked),
+                n_candidates=float(p.n_candidates),
+                est_makespan_us=float(p.est_makespan_us or 0.0),
+                tuned_alloc=p.alloc_policy,   # type: ignore[arg-type]
+                tuned_order=p.order_policy,   # type: ignore[arg-type]
+            )
     return results

@@ -14,6 +14,16 @@ from repro.core.graph import OpGraph, OpKind
 from repro.core.profiler import ModelProfiler, elementwise_cost, gemm_cost, norm_cost
 
 
+@pytest.fixture(autouse=True)
+def _isolated_calib_disk(tmp_path, monkeypatch):
+    """Point the calibration cache's disk tier at a per-test directory.
+
+    Tests model-check the in-memory LRU counters; a populated
+    ``~/.cache/repro/calib`` from an earlier run (or test) would turn
+    expected misses into disk hits."""
+    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
+
+
 @contextlib.contextmanager
 def count_measure_calls():
     """Patch ModelProfiler.measure with a call counter (restored on exit).

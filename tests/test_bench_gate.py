@@ -94,6 +94,26 @@ def test_gate_threshold_flag(tmp_path):
                 "--threshold", "0.10").returncode == 1
 
 
+def test_gate_makespan_only_ignores_wallclock(tmp_path):
+    """--makespan-only (CI mode): wall-clock ms regressions pass, the
+    deterministic makespan metrics still gate."""
+    _write(tmp_path / "old", SCHED_OK, INFER_OK)
+    slow = json.loads(json.dumps(SCHED_OK))
+    slow["workloads"][0]["schedule_ms"] = 99.0          # wall-clock blowup
+    slow_inf = json.loads(json.dumps(INFER_OK))
+    slow_inf["workloads"][0]["schedule_ms"] = 99.0
+    _write(tmp_path / "new", slow, slow_inf)
+    assert _run(tmp_path / "old", tmp_path / "new").returncode == 1
+    assert _run(tmp_path / "old", tmp_path / "new",
+                "--makespan-only").returncode == 0
+    bad = json.loads(json.dumps(INFER_OK))
+    bad["workloads"][0]["policies"]["opara"]["makespan_us"] = 700.0
+    _write(tmp_path / "new", slow, bad)
+    r = _run(tmp_path / "old", tmp_path / "new", "--makespan-only")
+    assert r.returncode == 1
+    assert "makespan_us" in r.stdout
+
+
 def test_gate_errors_without_baseline(tmp_path):
     _write(tmp_path / "new", SCHED_OK, INFER_OK)
     r = _run(tmp_path / "empty", tmp_path / "new")

@@ -194,9 +194,12 @@ def test_calibration_cache_evicts_lru(monkeypatch):
     for s in shapes:
         opara.calibrate(g, {0: jnp.ones(s, jnp.float32)}, repeats=1)
     assert opara.cache_stats()["calib_entries"] == 2
-    # oldest geometry was evicted → re-calibrating it is a miss
+    # oldest geometry was evicted → re-calibrating it misses the memory LRU
+    # (load=False pins the check to the in-memory tier; with the disk tier
+    # enabled the eviction would instead resolve as a calib_disk_hit)
     misses = opara.cache_stats()["calib_misses"]
-    opara.calibrate(g, {0: jnp.ones(shapes[0], jnp.float32)}, repeats=1)
+    opara.calibrate(g, {0: jnp.ones(shapes[0], jnp.float32)}, repeats=1,
+                    load=False)
     assert opara.cache_stats()["calib_misses"] == misses + 1
     # most-recent geometry is still warm
     hits = opara.cache_stats()["calib_hits"]
