@@ -7,7 +7,8 @@ import dataclasses
 import time
 
 from repro.configs import list_archs
-from repro.core import SimConfig, autotune, compare_policies, compile_plan, schedule
+from repro.core import (Session, SimConfig, compare_policies, compile_plan,
+                        schedule)
 from repro.core.profiler import HardwareSpec
 
 from .workloads import PAPER_WORKLOADS, arch_workload
@@ -44,8 +45,11 @@ def run(batch: int = 1) -> list[str]:
             graphs[arch] = arch_workload(arch, batch=batch)
         except Exception:
             continue
+    # one autotuning session for the whole sweep — each workload's search
+    # runs once and lands in the session's plan cache (the serving pattern)
+    tune_sess = Session(hw=BENCH_HW, sim_cfg=BENCH_SIM, autotune=True)
     for name, g in graphs.items():
-        tuned = autotune(g, hw=BENCH_HW, cfg=BENCH_SIM)
+        tuned = tune_sess.plan(g)
         res = compare_policies(g, hw=BENCH_HW, cfg=BENCH_SIM,
                                opara_plan=tuned)
         base = res["cuda_graph_sequential"]["makespan_us"]

@@ -12,9 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ModelProfiler, V5E, autotune, compile_plan,
+from repro.core import (ModelProfiler, Session, V5E, autotune, compile_plan,
                         estimate_makespan, schedule, simulate)
-from repro.core import api as opara
 
 from .bench_inference import BENCH_SIM
 from .workloads import bert_like
@@ -58,16 +57,16 @@ def run() -> list[str]:
 
     # -- ≥2000-op graph: program-compiler overhead + plan-cache hit ----------
     big = bert_like(1, n_layers=180)          # ~3.8k ops (21 ops/layer)
-    opara.clear_caches()
+    sess = Session()
     t0 = time.perf_counter()
     p_big = schedule(big, "opara", "opara")
     t_sched = (time.perf_counter() - t0) * 1e3
     t0 = time.perf_counter()
     compile_plan(p_big)
     t_lower = (time.perf_counter() - t0) * 1e3
-    opara.plan(big)                            # miss (populates the cache)
+    sess.plan(big)                             # miss (populates the cache)
     t0 = time.perf_counter()
-    opara.plan(big)                            # hit
+    sess.plan(big)                             # hit
     t_hit = (time.perf_counter() - t0) * 1e3
     rows.append(f"big_graph_n_ops,{len(big)}")
     rows.append(f"big_graph_schedule,{t_sched:.2f}")
@@ -86,11 +85,9 @@ def run() -> list[str]:
         for _ in range(3))
     t_tune = min(_timed(lambda: autotune(big, cfg=BENCH_SIM))
                  for _ in range(3))
-    opara.clear_caches()
-    opara.plan(big, autotune=True, sim_cfg=BENCH_SIM)   # miss: tunes once
-    t_tune_hit = min(_timed(
-        lambda: opara.plan(big, autotune=True, sim_cfg=BENCH_SIM))
-        for _ in range(3))
+    tune_sess = Session(autotune=True, sim_cfg=BENCH_SIM)
+    tune_sess.plan(big)                        # miss: tunes once
+    t_tune_hit = min(_timed(lambda: tune_sess.plan(big)) for _ in range(3))
     rows.append(f"big_graph_simulate,{t_sim:.2f}")
     rows.append(f"big_graph_estimate,{t_est:.3f}")
     rows.append(f"big_graph_estimate_speedup,{t_sim / max(t_est, 1e-9):.1f}")

@@ -13,8 +13,7 @@ import time
 
 import jax.numpy as jnp
 
-from repro.core import api as opara
-from repro.core import schedule
+from repro.core import Session, schedule
 
 from repro.core.nimble import allocate_streams_nimble
 from repro.core.stream_alloc import allocate_streams
@@ -45,9 +44,9 @@ def run() -> list[str]:
         t_opara = _time_ms(allocate_streams, g)
         t_nimble = _time_ms(allocate_streams_nimble, g)
         t_sched = _time_ms(lambda: schedule(g, "opara", "opara"), repeats=3)
-        opara.clear_caches()
-        opara.plan(g)                     # miss: populates the plan cache
-        t_hit = _time_ms(lambda: opara.plan(g), repeats=3)
+        sess = Session()                  # fresh caches per workload row
+        sess.plan(g)                      # miss: populates the plan cache
+        t_hit = _time_ms(lambda: sess.plan(g), repeats=3)
         rows.append(f"{name},{len(g)},{t_opara:.3f},{t_nimble:.3f},"
                     f"{t_nimble / max(t_opara, 1e-9):.1f},"
                     f"{t_sched:.3f},{t_hit:.4f}")
@@ -65,34 +64,25 @@ def run() -> list[str]:
 def _measured_calibration() -> list[str]:
     """Cold vs warm measured-mode scheduling on the payload graph.
 
-    The calibration cache's disk tier is pointed at a throwaway directory:
-    a table persisted by an earlier local run would turn the cold
-    measurement into a disk hit and skew the committed trajectory."""
-    import os
+    The session's calibration disk tier is pointed at a throwaway directory
+    (``SessionConfig.calib_dir``): a table persisted by an earlier local run
+    would turn the cold measurement into a disk hit and skew the committed
+    trajectory."""
     import tempfile
     gp = build_payload_graph()
     inputs = {n.op_id: jnp.ones(n.out_shape, jnp.float32)
               for n in gp if n.fn is None}
-    old_dir = os.environ.get("REPRO_CALIB_DIR")
     with tempfile.TemporaryDirectory(prefix="repro-calib-") as tmp:
-        os.environ["REPRO_CALIB_DIR"] = tmp
-        try:
-            return _measured_calibration_inner(gp, inputs)
-        finally:
-            if old_dir is None:
-                os.environ.pop("REPRO_CALIB_DIR", None)
-            else:
-                os.environ["REPRO_CALIB_DIR"] = old_dir
+        return _measured_calibration_inner(Session(calib_dir=tmp), gp, inputs)
 
 
-def _measured_calibration_inner(gp, inputs) -> list[str]:
-    opara.clear_caches()
+def _measured_calibration_inner(sess, gp, inputs) -> list[str]:
     t0 = time.perf_counter()
-    opara.plan(gp, measured_inputs=inputs)      # times once + schedules
+    sess.plan(gp, measured_inputs=inputs)       # times once + schedules
     t_cold = (time.perf_counter() - t0) * 1e3
-    t_warm = _time_ms(lambda: opara.plan(gp, measured_inputs=inputs),
+    t_warm = _time_ms(lambda: sess.plan(gp, measured_inputs=inputs),
                       repeats=3)
-    stats = opara.cache_stats()
+    stats = sess.cache_stats()
     RECORDS.append({
         "workload": "payload-graph (measured)", "n_ops": len(gp),
         "measured_cold_ms": round(t_cold, 3),

@@ -66,11 +66,16 @@ def main(argv=None) -> int:
     if not args.quick:
         sections.append(("wallclock", bench_wallclock.run))
 
+    from repro.core import reset_default_session
+
     failures = 0
     ran: set[str] = set()
     for name, fn in sections:
         if args.only and args.only != name:
             continue
+        # sections that go through the default session start cold — one
+        # section's warm plan cache must not flatter another's timings
+        reset_default_session()
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
         t0 = time.perf_counter()
         try:

@@ -294,6 +294,12 @@ def attach_payloads(g: OpGraph, d: int = 32, tokens: int = 4,
         w = jnp.asarray(rng.standard_normal((d, d)) * (1.0 / d), jnp.float32)
         node.fn = _generic_payload
         node.meta["consts"] = (w,)
+        # exporter-built graphs may carry payload="matmul" markers (branch
+        # GEMM routing contract: semantics exactly x @ w).  The generic
+        # payload is NOT a plain matmul, so the marker must go — a stale one
+        # would route stacked groups to the fused GEMM kernel and silently
+        # compute the wrong function.
+        node.meta.pop("payload", None)
         node.out_shape = (tokens, d)
         node.out_dtype = jnp.float32
     # fn/consts/out_shape are structural signature inputs — recompute

@@ -10,15 +10,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.bench_inference import BENCH_HW as HW, BENCH_SIM
 from repro.configs import get_config
-from repro.core import compare_policies, schedule
+from repro.core import Session, compare_policies
 from repro.models.opgraph_export import build_lm_opgraph
+
+# one session for the whole demo: every (arch, seq) schedule lands in its
+# plan cache, so re-running a geometry would be a cache hit
+sess = Session(hw=HW, sim_cfg=BENCH_SIM)
 
 for arch in ("kimi-k2-1t-a32b", "hymba-1.5b", "rwkv6-1.6b", "qwen2-0.5b"):
     cfg = get_config(arch)
     for seq_len, regime in ((32, "decode/small-op regime"),
                             (4096, "prefill/saturated regime")):
         g = build_lm_opgraph(cfg, batch=1, seq=seq_len, n_layers=2)
-        plan = schedule(g, "opara", "opara", HW)
+        plan = sess.plan(g)
         s = plan.stats()
         print(f"\n=== {arch} @ seq={seq_len} ({regime}; {len(g)} ops) ===")
         print(f"  streams={int(s['n_streams'])}  waves={int(s['n_waves'])}  "

@@ -2,10 +2,11 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a branchy operator graph, runs Stream Allocation (Alg. 1) +
-resource/interference-aware launch ordering (Alg. 2), captures ONE fused
-executable (the CUDA-Graph analogue), and verifies it against eager
-op-by-op execution.
+Builds a branchy operator graph and hands it to a ``Session`` — Stream
+Allocation (Alg. 1) + resource/interference-aware launch ordering (Alg. 2) +
+capture into ONE fused executable (the CUDA-Graph analogue) behind a single
+``compile()`` call — then verifies it against eager op-by-op execution and
+shows the cache provenance ``explain()`` reports on the cold vs warm path.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -15,19 +16,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.conftest_shim import build_payload_graph
-from repro.core import api as opara
-from repro.core import run_sequential_uncompiled
+from repro.core import Session, run_sequential_uncompiled
 
 g = build_payload_graph(n_blocks=4, width=4, d=64, tokens=8)
 print(f"graph: {len(g)} operators, max width {g.max_width()}")
 
-plan = opara.plan(g)
+sess = Session()                              # config-scoped caches
+model = sess.compile(g)                       # plan + capture → executable
+plan = model.plan
 print(f"streams: {plan.n_streams}   waves: {plan.waves.n_waves}   "
       f"kernels after fusion: {plan.waves.n_fused_kernels}")
 
-exe = opara.optimize(g)                       # capture → single executable
 x = jnp.ones((8, 64), jnp.float32)
-out = exe({"x": x})[0]
+out = model({"x": x})[0]
 ref = run_sequential_uncompiled(g, {"x": x})[0]
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
 print("fused executable matches eager execution ✓")
+
+warm = sess.compile(g)                        # second compile: all cache hits
+for m, label in ((model, "cold"), (warm, "warm")):
+    rep = m.explain()
+    print(f"{label}: cache={rep['cache']}  "
+          f"total={rep['stages_ms']['total']:.2f} ms")
+assert warm.explain()["cache"] == {"calibration": "off", "plan": "hit",
+                                   "executable": "hit"}

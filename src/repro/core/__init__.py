@@ -38,12 +38,19 @@ from .scheduler import (
     schedule,
     simulate_plan,
 )
+from .session import (
+    CompiledModel,
+    Session,
+    SessionConfig,
+    calibration_key,
+    default_session,
+    graph_signature,
+    reset_default_session,
+)
 from .api import (
     cache_stats,
     calibrate,
-    calibration_key,
     clear_caches,
-    graph_signature,
     optimize,
     plan,
 )
@@ -61,6 +68,8 @@ __all__ = [
     "CapturedGraph", "Step", "capture", "run_sequential_uncompiled",
     "ALLOC_POLICIES", "SchedulePlan", "autotune", "compare_policies",
     "compile_plan", "estimate_plan", "schedule", "simulate_plan",
+    "CompiledModel", "Session", "SessionConfig", "default_session",
+    "reset_default_session",
     "cache_stats", "calibrate", "calibration_key", "clear_caches",
     "graph_signature", "optimize", "plan",
 ]

@@ -1,388 +1,143 @@
-"""User-facing Opara API.
+"""Legacy module-function Opara API (shims over :mod:`repro.core.session`).
 
-    from repro.core import api as opara
+.. deprecated::
+    New code should construct a :class:`repro.core.Session`::
 
-    g = ...            # OpGraph emitted by a model (repro.models.*)
-    exe = opara.optimize(g)          # full pipeline → single executable
-    outs = exe({"tokens": x})
+        from repro.core import Session, SessionConfig
 
-``optimize`` = Alg.1 streams + profile + Alg.2 order + wave fusion + capture,
-i.e. the whole paper pipeline with one call, non-intrusively wrapping any
-operator graph.  ``plan(..., autotune=True)`` / ``optimize(...,
-autotune=True)`` swap the fixed policies for the simulator-guided schedule
-search (:func:`repro.core.scheduler.autotune`); the search result is cached
-under the same plan cache (keyed by the ``sim_cfg`` cost model alongside the
-structural signature), so tuning happens once per graph structure and the
-warm path is identical to the single-policy one.
+        sess = Session(SessionConfig(autotune=True))
+        model = sess.compile(graph, inputs=profiling_inputs)
+        outs = model({"tokens": x})
 
-Compiled-plan cache
--------------------
-Scheduling is a pure function of graph *structure* (op kinds, edges, shapes,
-dtypes, analytic costs), the hydrated calibration (if any) and the chosen
-policies — never of the weight values.  ``plan()`` therefore memoizes
-:class:`SchedulePlan`s under a structural :func:`graph_signature`; a second
-``plan()``/``schedule()`` on an architecturally-identical graph (e.g. every
-``serving`` engine tick, or rebuilding the same model) does zero
-re-profiling, re-allocation and re-ordering.  On a hit for a *different*
-graph object the plan is rebound to the caller's graph (op_ids are
-structural: same build order → same ids).
+    See ``docs/api.md`` for the full migration table.
 
-Measured-profile calibration cache
-----------------------------------
-The paper "profiles each DNN inference only once" (§3.2).  ``plan(...,
-measured_inputs=...)`` realizes that: the first call runs the single
-profiling inference and stores the resulting :class:`ProfileTable` keyed by
-``(graph.node_signature(), graph.input_signature(inputs), hw.name)``; every
-later call — including on a *structurally identical* graph object such as a
-reloaded checkpoint — hydrates ``measured_us`` from the cache (zero
-re-timing) and then takes the warm plan-cache path.  The hydrated table's
-fingerprint rides in :func:`graph_signature`, so calibrated and analytic
-plans for the same structure never collide.  :func:`calibrate` is the
-stand-alone entry point (e.g. to control ``repeats``).
+Historically this module owned the whole pipeline behind three functions
+(``plan`` / ``optimize`` / ``calibrate``) whose kwargs grew into a
+cross-product (``alloc_policy``, ``order_policy``, ``hw``, ``sim_cfg``,
+``autotune``, ``weights_key``, ``load``, …) backed by three process-global
+LRU caches.  That state now lives on :class:`repro.core.session.Session`;
+the functions below delegate to the process-wide
+:func:`repro.core.session.default_session` — so existing callers keep the
+exact same caching/amortization behavior — and emit ``DeprecationWarning``
+when passed the superseded configuration kwargs (per-call data such as
+``measured_inputs``, ``repeats``, ``output_ids`` and ``cache`` stays
+warning-free: those remain arguments on the ``Session`` methods too).
 
-The calibration cache has a disk tier: tables are persisted as JSON under
-``$REPRO_CALIB_DIR`` (default ``~/.cache/repro/calib``), keyed by the same
-(node_signature, input_signature, hw.name) triple, so serving processes
-re-hydrate measured profiles across restarts without re-timing.
-``plan(..., load=False)`` / ``calibrate(..., load=False)`` skip the disk
-read (escape hatch for invalidated timings, e.g. after a runtime upgrade).
-
-``optimize()`` adds a third cache level for the captured executable.  An
-executable closes over payload callables and weights, so its key is the
-plan signature PLUS a weights fingerprint of every node's ``fn`` and
-``meta["consts"]`` arrays.  Two fingerprint modes (``weights_key``):
-``"identity"`` (default) uses ``id()`` — same graph object or same arrays →
-the IDENTICAL executable object, no re-lowering, no re-trace; cached entries
-pin their graph alive, so ``id()`` fingerprints cannot collide with live
-objects.  ``"content"`` (opt-in) hashes array bytes, so a checkpoint reload
-that recreates *identical values* in fresh arrays still reuses the
-executable — at the cost of hashing every weight once per ``optimize`` call.
-
-Invalidation: all three caches are LRU-bounded (:data:`_CACHE_SIZE`);
-mutating a graph via ``add()`` changes its signature (and drops any hydrated
-calibration) so stale hits are impossible.  ``clear_caches()`` resets
-everything, including ``cache_stats()`` counters (tests).
+``cache_stats()`` / ``clear_caches()`` report on and reset the default
+session only; explicitly-constructed sessions are isolated and unaffected.
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-import json
-import os
-import tempfile
-from collections import OrderedDict
+import warnings
 from typing import Any, Mapping
-
-import numpy as np
 
 from .capture import CapturedGraph
 from .graph import OpGraph
-from .profiler import (
-    HardwareSpec,
-    ModelProfiler,
-    ProfileTable,
-    V5E,
-    apply_profile,
-)
-from .scheduler import SchedulePlan, compile_plan, schedule
-from .scheduler import autotune as autotune_schedule
+from .profiler import HardwareSpec, ProfileTable, V5E
+from .scheduler import SchedulePlan
 from .simulator import SimConfig
+from .session import (
+    Session,
+    SessionConfig,
+    calibration_key,
+    default_session,
+    graph_signature,
+)
 
-_CACHE_SIZE = 64
-_plan_cache: OrderedDict[tuple, SchedulePlan] = OrderedDict()
-_exec_cache: OrderedDict[tuple, CapturedGraph] = OrderedDict()
-_calib_cache: OrderedDict[tuple, ProfileTable] = OrderedDict()
-_stats = {"plan_hits": 0, "plan_misses": 0, "exec_hits": 0, "exec_misses": 0,
-          "calib_hits": 0, "calib_misses": 0, "calib_disk_hits": 0}
+__all__ = [
+    "cache_stats", "calibrate", "calibration_key", "clear_caches",
+    "graph_signature", "optimize", "plan",
+]
 
-# Disk tier of the calibration cache: ProfileTables serialized under
-# ``$REPRO_CALIB_DIR`` (default ``~/.cache/repro/calib``), one JSON file per
-# (node_signature, input_signature, hw.name) triple, so a serving process
-# restart re-hydrates measured profiles without a profiling inference.
-# Bounded: stores beyond _DISK_CACHE_MAX entries evict the oldest-mtime
-# files (a coarse LRU — loads don't bump mtime, but a serving fleet's hot
-# geometries get re-stored whenever the memory LRU cycles them).
-_CALIB_DIR_ENV = "REPRO_CALIB_DIR"
-_DISK_CACHE_MAX = 512
+# Sentinel distinguishing "kwarg not passed" from an explicit default value:
+# only explicitly-passed config kwargs trigger the deprecation path.
+_UNSET: Any = object()
 
-
-def graph_signature(
-    graph: OpGraph,
-    alloc_policy: str = "opara",
-    order_policy: str = "opara",
-    hw: HardwareSpec = V5E,
-    max_lanes: int | None = None,
-    sim_cfg: SimConfig | None = None,
-) -> tuple:
-    """Structural cache key: everything scheduling reads, nothing it doesn't.
-
-    Per node: kind, edges, output shape/dtype, fusion signature, analytic
-    cost fields (including the derived ``resource_demand()`` the repacker
-    admits on), payload marker and const shapes (capture's stackability
-    inputs) — see :meth:`OpGraph.node_signature`, which memoizes the node
-    part per graph version.  The hydrated calibration fingerprint (if any)
-    is a separate component: measured timings change schedules, but they are
-    not part of the graph's structural identity.  ``sim_cfg`` (a frozen,
-    hashable :class:`SimConfig`) joins the key for autotuned plans — the
-    cost model's resource cap and penalties steer the search, so two
-    configs must never share a tuned plan.  Weight *values* and payload
-    identities are deliberately excluded — they cannot change a schedule.
-
-    The per-node part enters as :meth:`OpGraph.signature_digest` (memoized
-    sha1 of the full node tuple) so cache probes stay O(1) in graph size.
-    """
-    return (graph.signature_digest(), graph.calibration_fp,
-            alloc_policy, order_policy, hw, max_lanes, sim_cfg)
+# legacy kwarg spelling → SessionConfig field (where they differ)
+_CONFIG_FIELD = {"load": "load_calibration"}
 
 
-def calibration_key(graph: OpGraph, inputs: Mapping[int, Any],
-                    hw: HardwareSpec = V5E) -> tuple:
-    """Calibration-cache key: structure × input geometry × hardware."""
-    return (graph.node_signature(), graph.input_signature(inputs), hw.name)
-
-
-def _content_digest(a: Any) -> tuple:
-    arr = np.asarray(a)
-    return (str(arr.dtype), arr.shape,
-            hashlib.sha1(arr.tobytes()).hexdigest())
-
-
-def _weights_fingerprint(graph: OpGraph, weights_key: str = "identity") -> tuple:
-    """Fingerprint of every payload + const array (executable cache key part).
-
-    ``identity`` — ``id()`` of callables and arrays (fast; live-object safe
-    because cached executables pin their graph).  ``content`` — code-object
-    identity for callables (stable across re-created lambdas from the same
-    source) + a byte digest of each const, so recreated-but-equal arrays
-    (checkpoint reload) share the executable.
-    """
-    if weights_key == "identity":
-        return tuple(
-            (id(n.fn), tuple(id(c) for c in n.meta.get("consts", ())))
-            for n in graph
-        )
-    if weights_key == "content":
-        return tuple(
-            (id(getattr(n.fn, "__code__", n.fn)),
-             tuple(_content_digest(c) for c in n.meta.get("consts", ())))
-            for n in graph
-        )
-    raise ValueError(f"unknown weights_key {weights_key!r}")
-
-
-def _lru_get(cache: OrderedDict, key: tuple) -> Any | None:
-    if key in cache:
-        cache.move_to_end(key)
-        return cache[key]
-    return None
-
-
-def _lru_put(cache: OrderedDict, key: tuple, value: Any) -> None:
-    cache[key] = value
-    cache.move_to_end(key)
-    while len(cache) > _CACHE_SIZE:
-        cache.popitem(last=False)
-
-
-def _calib_dir() -> str:
-    return os.environ.get(_CALIB_DIR_ENV) or os.path.join(
-        os.path.expanduser("~"), ".cache", "repro", "calib")
-
-
-def _calib_path(key: tuple) -> str:
-    digest = hashlib.sha1(repr(key).encode()).hexdigest()
-    return os.path.join(_calib_dir(), f"{digest}.json")
-
-
-def _calib_disk_load(key: tuple) -> ProfileTable | None:
-    try:
-        with open(_calib_path(key)) as f:
-            doc = json.load(f)
-    except (OSError, ValueError):
-        return None
-    if doc.get("key") != repr(key):   # sha1 collision / stale format
-        return None
-    return ProfileTable(
-        hw_name=doc["hw_name"],
-        measured_us=tuple((int(i), float(us)) for i, us in doc["measured_us"]))
-
-
-def _calib_disk_store(key: tuple, table: ProfileTable) -> None:
-    """Best-effort atomic write; serving must never fail on a full disk."""
-    tmp = None
-    try:
-        os.makedirs(_calib_dir(), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=_calib_dir(), suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump({"key": repr(key), "hw_name": table.hw_name,
-                       "measured_us": [list(m) for m in table.measured_us]}, f)
-        os.replace(tmp, _calib_path(key))
-        _calib_disk_evict()
-    except OSError:
-        if tmp is not None:   # don't strand the temp file on a full disk
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-
-
-def _calib_disk_evict() -> None:
-    """Drop oldest-mtime entries beyond _DISK_CACHE_MAX (runs per store —
-    rare: stores happen only on full cache misses)."""
-    d = _calib_dir()
-    try:
-        entries = [e for e in os.scandir(d) if e.name.endswith(".json")]
-        if len(entries) <= _DISK_CACHE_MAX:
-            return
-        entries.sort(key=lambda e: e.stat().st_mtime)
-        for e in entries[:len(entries) - _DISK_CACHE_MAX]:
-            try:
-                os.unlink(e.path)
-            except OSError:
-                pass
-    except OSError:
-        pass
+def _effective(fn_name: str, **overrides: Any) -> tuple[Session, SessionConfig]:
+    """Resolve the default session + a per-call config with any explicitly
+    passed legacy kwargs applied (warning once per call site)."""
+    sess = default_session()
+    passed = {k: v for k, v in overrides.items() if v is not _UNSET}
+    if passed:
+        warnings.warn(
+            f"passing {sorted(passed)} to repro.core.api.{fn_name}() is "
+            "deprecated; construct a repro.core.Session(SessionConfig(...)) "
+            "instead (see docs/api.md for the migration table)",
+            DeprecationWarning, stacklevel=3)
+        cfg_kwargs = {_CONFIG_FIELD.get(k, k): v for k, v in passed.items()}
+        return sess, dataclasses.replace(sess.config, **cfg_kwargs)
+    return sess, sess.config
 
 
 def calibrate(
     graph: OpGraph,
     inputs: Mapping[int, Any],
-    hw: HardwareSpec = V5E,
-    repeats: int = 3,
-    load: bool = True,
+    hw: HardwareSpec = _UNSET,
+    repeats: int | None = None,
+    load: bool | None = None,
 ) -> ProfileTable:
-    """Hydrate ``graph`` with a measured profile, timing at most once.
+    """Deprecated shim for :meth:`Session.calibrate` on the default session.
 
-    Memory-cache hit → the stored table is re-applied (zero re-timing);
-    memory miss → the disk tier is consulted (``load=False`` skips it, e.g.
-    after a kernel/runtime upgrade that invalidates persisted timings);
-    full miss → one profiling inference (the paper's "profile each DNN
-    inference only once"), stored to both tiers for every structurally
-    identical graph — including one built by a later process — that follows.
-    """
-    key = calibration_key(graph, inputs, hw)
-    table = _lru_get(_calib_cache, key)
-    if table is not None:
-        _stats["calib_hits"] += 1            # memory-tier hit
-    elif load and (table := _calib_disk_load(key)) is not None:
-        _stats["calib_disk_hits"] += 1       # disk-tier hit (counted apart)
-        _lru_put(_calib_cache, key, table)
-    else:
-        _stats["calib_misses"] += 1
-        table = ModelProfiler(hw).measure(graph, inputs, repeats=repeats)
-        _lru_put(_calib_cache, key, table)
-        _calib_disk_store(key, table)
-    if graph.calibration_fp != table.fingerprint:
-        apply_profile(graph, table)
+    ``repeats`` / ``load`` left unset defer to the session config
+    (``calibration_repeats`` / ``load_calibration``), exactly like
+    :meth:`Session.calibrate`."""
+    sess, cfg = _effective("calibrate", hw=hw)
+    table, _ = sess._calibrate(graph, inputs, cfg, repeats=repeats, load=load)
     return table
-
-
-def _autotune_key_parts(sim_cfg: SimConfig | None) -> tuple[str, str, SimConfig]:
-    """The autotuned-plan cache-key normalization, shared by plan() and
-    optimize() so the executable-cache key can never drift from the
-    plan-cache key: policy slots carry a sentinel (the tuner picks the real
-    policies) and sim_cfg defaults the same way autotune_schedule does, so
-    an explicit default SimConfig() shares the implicit-None entry."""
-    return "__autotune__", "__autotune__", sim_cfg or SimConfig()
 
 
 def plan(
     graph: OpGraph,
-    alloc_policy: str = "opara",
-    order_policy: str = "opara",
-    hw: HardwareSpec = V5E,
+    alloc_policy: str = _UNSET,
+    order_policy: str = _UNSET,
+    hw: HardwareSpec = _UNSET,
     measured_inputs: Mapping[int, Any] | None = None,
     cache: bool = True,
-    autotune: bool = False,
-    sim_cfg: SimConfig | None = None,
-    load: bool = True,
+    autotune: bool = _UNSET,
+    sim_cfg: SimConfig | None = _UNSET,
+    load: bool = _UNSET,
 ) -> SchedulePlan:
-    """Cached scheduling; ``autotune=True`` replaces the single-policy
-    pipeline with the simulator-guided search (``alloc_policy`` /
-    ``order_policy`` are then ignored — the tuner picks them) under
-    ``sim_cfg``'s cost model.  The search result lands in the same plan
-    cache, so the warm path costs the same ~0.04 ms either way.  ``load``
-    gates the calibration cache's disk tier (see :func:`calibrate`).
-    """
-    if autotune:
-        alloc_policy, order_policy, sim_cfg = _autotune_key_parts(sim_cfg)
-    if not cache:
-        if autotune:
-            return autotune_schedule(graph, hw=hw, cfg=sim_cfg,
-                                     measured_inputs=measured_inputs)
-        return schedule(graph, alloc_policy, order_policy, hw,
-                        measured_inputs=measured_inputs, sim_cfg=sim_cfg)
-    if measured_inputs is not None:
-        calibrate(graph, measured_inputs, hw, load=load)
-    key = graph_signature(graph, alloc_policy, order_policy, hw,
-                          sim_cfg=sim_cfg)
-    hit = _lru_get(_plan_cache, key)
-    if hit is not None:
-        _stats["plan_hits"] += 1
-        if hit.graph is graph:
-            return hit
-        # same structure, different graph object: rebind (op_ids match)
-        return dataclasses.replace(hit, graph=graph)
-    _stats["plan_misses"] += 1
-    # measured timings (if any) are already hydrated onto node costs, so the
-    # plain pipeline schedules with them — no re-timing here.
-    if autotune:
-        p = autotune_schedule(graph, hw=hw, cfg=sim_cfg)
-    else:
-        p = schedule(graph, alloc_policy, order_policy, hw, sim_cfg=sim_cfg)
-    _lru_put(_plan_cache, key, p)
+    """Deprecated shim for :meth:`Session.plan` on the default session."""
+    sess, cfg = _effective(
+        "plan", alloc_policy=alloc_policy, order_policy=order_policy, hw=hw,
+        autotune=autotune, sim_cfg=sim_cfg, load=load)
+    p, _ = sess._plan(graph, cfg, measured_inputs=measured_inputs,
+                      cache=cache)
     return p
 
 
 def optimize(
     graph: OpGraph,
-    alloc_policy: str = "opara",
-    order_policy: str = "opara",
-    hw: HardwareSpec = V5E,
+    alloc_policy: str = _UNSET,
+    order_policy: str = _UNSET,
+    hw: HardwareSpec = _UNSET,
     output_ids=None,
-    gemm_kernel: str = "auto",
+    gemm_kernel: str = _UNSET,
     cache: bool = True,
-    weights_key: str = "identity",
-    autotune: bool = False,
-    sim_cfg: SimConfig | None = None,
+    weights_key: str = _UNSET,
+    autotune: bool = _UNSET,
+    sim_cfg: SimConfig | None = _UNSET,
 ) -> CapturedGraph:
-    if weights_key not in ("identity", "content"):
-        raise ValueError(f"unknown weights_key {weights_key!r}")
-    if autotune:
-        # the executable-cache key below must stay byte-identical to the
-        # plan-cache key plan() builds internally — one shared normalizer
-        alloc_policy, order_policy, sim_cfg = _autotune_key_parts(sim_cfg)
-    p = plan(graph, alloc_policy, order_policy, hw, cache=cache,
-             autotune=autotune, sim_cfg=sim_cfg)
-    if not cache:
-        return compile_plan(p, output_ids=output_ids, gemm_kernel=gemm_kernel)
-    key = (
-        graph_signature(graph, alloc_policy, order_policy, hw,
-                        sim_cfg=sim_cfg),
-        weights_key,
-        _weights_fingerprint(graph, weights_key),
-        tuple(output_ids) if output_ids is not None else None,
-        gemm_kernel,
-    )
-    hit = _lru_get(_exec_cache, key)
-    if hit is not None:
-        _stats["exec_hits"] += 1
-        return hit
-    _stats["exec_misses"] += 1
-    exe = compile_plan(p, output_ids=output_ids, gemm_kernel=gemm_kernel)
-    _lru_put(_exec_cache, key, exe)
+    """Deprecated shim for :meth:`Session.optimize` on the default session."""
+    sess, cfg = _effective(
+        "optimize", alloc_policy=alloc_policy, order_policy=order_policy,
+        hw=hw, gemm_kernel=gemm_kernel, weights_key=weights_key,
+        autotune=autotune, sim_cfg=sim_cfg)
+    p, _ = sess._plan(graph, cfg, cache=cache)
+    exe, _ = sess._capture(graph, cfg, p, output_ids=output_ids, cache=cache)
     return exe
 
 
 def cache_stats() -> dict[str, int]:
-    return dict(_stats, plan_entries=len(_plan_cache),
-                exec_entries=len(_exec_cache),
-                calib_entries=len(_calib_cache))
+    """Hit/miss counters + entry counts of the DEFAULT session's caches."""
+    return default_session().cache_stats()
 
 
 def clear_caches() -> None:
-    _plan_cache.clear()
-    _exec_cache.clear()
-    _calib_cache.clear()
-    for k in _stats:
-        _stats[k] = 0
+    """Reset the DEFAULT session's memory tiers and counters."""
+    default_session().clear_caches()

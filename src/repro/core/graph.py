@@ -295,7 +295,7 @@ class OpGraph:
         it doesn't (weight values, payload identities, measured timings —
         those are tracked separately via ``calibration_fp`` so hydrating a
         measured profile does not change the graph's structural identity).
-        The compiled-plan and calibration caches in :mod:`repro.core.api`
+        The compiled-plan and calibration caches on :class:`repro.core.Session`
         build their keys from this."""
         if self._node_sig is None:
             self._node_sig = tuple(

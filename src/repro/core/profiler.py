@@ -24,7 +24,7 @@ cached and re-used ("profile once", then amortize):
 * :func:`detach_profile` reverses it, returning the graph to the analytic
   state (and handing back the table).
 
-The calibration cache in :mod:`repro.core.api` keys tables by
+The calibration cache on :class:`repro.core.Session` keys tables by
 ``(graph.node_signature(), graph.input_signature(inputs), hw.name)``: the
 structural graph shape, the input shapes/dtypes the profiling run saw, and
 the hardware the timings are valid for.  A structurally identical graph
@@ -197,7 +197,7 @@ class ModelProfiler:
         single profiling run; we keep ``repeats`` tiny because kernel launch
         noise on CPU is high.  Pure: the graph is NOT mutated — hydrate the
         returned table with :func:`apply_profile` (or let the calibration
-        cache in :mod:`repro.core.api` do it).
+        cache on :class:`repro.core.Session` do it).
         """
         values: dict[int, Any] = dict(inputs)
         measured: list[tuple[int, float]] = []

@@ -9,8 +9,8 @@ loop on predicted makespan: it evaluates the cross-product of
 simulator's fast cost model (:func:`repro.core.simulator.estimate_makespan`)
 and returns the min-makespan plan — the IOS insight (cost-model-guided
 inter-operator schedule search) kept off the inference critical path the
-Nimble way, by hiding the search behind the plan cache in
-:mod:`repro.core.api`.
+Nimble way, by hiding the search behind the per-session plan cache
+(:class:`repro.core.Session`).
 
 Every stage is swappable so benchmarks can mix and match (e.g. Nimble
 streams + topo order = the Nimble baseline; one stream + topo order =
@@ -53,6 +53,9 @@ class SchedulePlan:
     order_policy: str
     alloc_time_ms: float
     order_time_ms: float
+    # -- per-stage timing hooks (CompiledModel.explain() reads these) -------
+    profile_time_ms: float = 0.0            # profiler stage (stage 2)
+    wave_time_ms: float = 0.0               # wave build / repack (stage 4)
     # -- autotune / repack bookkeeping --------------------------------------
     repacked: bool = False                  # waves came from repack_waves
     sim_cfg: SimConfig | None = None        # cost-model config used, if any
@@ -72,6 +75,8 @@ class SchedulePlan:
             n_syncs=float(count_syncs(self.graph, self.stream_plan)),
             alloc_time_ms=self.alloc_time_ms,
             order_time_ms=self.order_time_ms,
+            profile_time_ms=self.profile_time_ms,
+            wave_time_ms=self.wave_time_ms,
             repacked=float(self.repacked),
             autotune_ms=self.autotune_ms,
             n_candidates=float(self.n_candidates),
@@ -110,8 +115,8 @@ def schedule(
 
     ``measured_inputs`` forces a fresh profiling inference (measure + hydrate
     via the profiler's apply lifecycle).  This path always re-times — use
-    :func:`repro.core.api.plan`, which consults the calibration cache first,
-    when "profile once" amortization is wanted.
+    :meth:`repro.core.Session.plan`, which consults the calibration cache
+    first, when "profile once" amortization is wanted.
 
     ``repack=True`` swaps the launch-order wave bucketing for the resource-
     and interference-aware repacker (:func:`repro.core.fusion.repack_waves`)
@@ -122,7 +127,9 @@ def schedule(
     profiler = ModelProfiler(hw)
     if measured_inputs is not None:
         apply_profile(graph, profiler.measure(graph, measured_inputs))
+    t0 = time.perf_counter()
     profiles = profiler.profile(graph)
+    t_profile = (time.perf_counter() - t0) * 1e3
 
     t0 = time.perf_counter()
     plan = ALLOC_POLICIES[alloc_policy](graph)
@@ -135,6 +142,7 @@ def schedule(
 
     if alloc_policy == "sequential":
         max_lanes = 1
+    t0 = time.perf_counter()
     if repack:
         waves = repack_waves(graph, plan, order, profiles,
                              cfg=sim_cfg or SimConfig(), max_lanes=max_lanes)
@@ -142,6 +150,7 @@ def schedule(
         validate_order(graph, order)
     else:
         waves = build_waves(graph, plan, order, max_lanes=max_lanes)
+    t_waves = (time.perf_counter() - t0) * 1e3
     return SchedulePlan(
         graph=graph,
         stream_plan=plan,
@@ -152,6 +161,8 @@ def schedule(
         order_policy=order_policy,
         alloc_time_ms=t_alloc,
         order_time_ms=t_order,
+        profile_time_ms=t_profile,
+        wave_time_ms=t_waves,
         repacked=repack,
         sim_cfg=sim_cfg,
     )
@@ -185,6 +196,7 @@ def autotune(
         apply_profile(graph, profiler.measure(graph, measured_inputs))
     t_search0 = time.perf_counter()
     profiles = profiler.profile(graph)
+    t_profile = (time.perf_counter() - t_search0) * 1e3
 
     small = len(graph) <= NIMBLE_ALLOC_OP_LIMIT
     if alloc_policies is None:
@@ -246,12 +258,15 @@ def autotune(
                 consider(est, ap, op_, True, splan, cand_order, waves)
     assert best is not None, "autotune needs a non-empty candidate space"
     est, ap, op_, rp, splan, cand_order, waves = best
+    t0 = time.perf_counter()
     if waves is None:
         waves = build_waves(graph, splan, cand_order, max_lanes=max_lanes)
+    t_waves = (time.perf_counter() - t0) * 1e3
     return SchedulePlan(
         graph=graph, stream_plan=splan, order=cand_order, waves=waves,
         profiles=profiles, alloc_policy=ap, order_policy=op_,
         alloc_time_ms=allocs[ap][1], order_time_ms=orders[op_][1],
+        profile_time_ms=t_profile, wave_time_ms=t_waves,
         repacked=rp, sim_cfg=cfg, est_makespan_us=est,
         autotune_ms=(time.perf_counter() - t_search0) * 1e3,
         n_candidates=n_candidates)

@@ -1,0 +1,590 @@
+"""Configuration-scoped compilation sessions.
+
+``Session`` is the one object a user hands a model graph to::
+
+    from repro.core import Session, SessionConfig
+
+    sess = Session(SessionConfig(autotune=True))
+    model = sess.compile(graph, inputs=profiling_inputs)
+    outs = model({"tokens": x})
+    model.explain()          # per-stage timings + cache provenance
+
+A session bundles every knob that used to travel as a kwarg cross-product
+through ``api.plan`` / ``api.optimize`` / ``api.calibrate`` (hardware,
+policies, simulator config, autotune, calibration and cache sizing) into one
+frozen :class:`SessionConfig`, and owns ALL cache state: the plan,
+executable and calibration LRUs plus the calibration disk tier live on the
+session, not in module globals.  Two sessions never share entries; serving
+fleets, benchmarks and tests each get an isolated, composable entry point,
+and new configuration axes (multi-device lanes, IOS-style refinement
+schedules) extend ``SessionConfig`` instead of widening three function
+signatures.
+
+The legacy module functions in :mod:`repro.core.api` remain as thin shims
+that delegate to a process-wide :func:`default_session` (so existing callers
+keep their amortization behavior) and emit ``DeprecationWarning`` when
+passed the superseded configuration kwargs.
+
+Cache semantics are unchanged from the module-global era — see the table in
+``docs/api.md``:
+
+* **plan** — keyed by the structural :func:`graph_signature` (policies, hw,
+  lanes, sim_cfg and the hydrated calibration fingerprint); a hit on a
+  different graph object is rebound (op_ids are structural).
+* **executable** — plan key + a weights fingerprint (``identity`` or
+  ``content``) + output ids + kernel route.
+* **calibration** — (node_signature, input_signature, hw.name), memory LRU
+  over a JSON disk tier under ``SessionConfig.calib_dir`` (default
+  ``$REPRO_CALIB_DIR`` or ``~/.cache/repro/calib``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Mapping
+
+import numpy as np
+
+from .capture import CapturedGraph
+from .graph import OpGraph
+from .launch_order import ORDER_POLICIES
+from .profiler import (
+    HardwareSpec,
+    ModelProfiler,
+    ProfileTable,
+    V5E,
+    apply_profile,
+)
+from .scheduler import (
+    ALLOC_POLICIES,
+    SchedulePlan,
+    compile_plan,
+    schedule,
+)
+from .scheduler import autotune as autotune_schedule
+from .simulator import SimConfig
+
+_CACHE_SIZE = 64          # default LRU bound (``SessionConfig.cache_size``)
+_CALIB_DIR_ENV = "REPRO_CALIB_DIR"
+_DISK_CACHE_MAX = 512     # default disk-tier bound
+
+_STAT_KEYS = ("plan_hits", "plan_misses", "exec_hits", "exec_misses",
+              "calib_hits", "calib_misses", "calib_disk_hits")
+
+
+# =========================================================================
+# Configuration
+# =========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    """Everything a compilation pipeline reads, bundled and immutable.
+
+    Frozen + hashable: a config can serve as a cache-key component and two
+    sessions built from equal configs behave identically (but still never
+    share cache state — isolation is per ``Session`` instance).
+    """
+
+    # -- scheduling ---------------------------------------------------------
+    hw: HardwareSpec = V5E
+    alloc_policy: str = "opara"
+    order_policy: str = "opara"
+    max_lanes: int | None = None
+    autotune: bool = False                # simulator-guided {alloc}×{order}×{repack}
+    sim_cfg: SimConfig | None = None      # cost model for autotune / repack
+    # -- capture / executable ----------------------------------------------
+    gemm_kernel: str = "auto"             # auto | pallas | vmap
+    weights_key: str = "identity"         # identity | content
+    # -- measured-profile calibration --------------------------------------
+    calibration_repeats: int = 3
+    load_calibration: bool = True         # consult the disk tier
+    calib_dir: str | None = None          # None → $REPRO_CALIB_DIR / default
+    # -- cache sizing -------------------------------------------------------
+    cache_size: int = _CACHE_SIZE         # per-session LRU bound (each tier)
+    disk_cache_entries: int = _DISK_CACHE_MAX
+
+    def __post_init__(self) -> None:
+        if self.alloc_policy not in ALLOC_POLICIES:
+            raise ValueError(f"unknown alloc_policy {self.alloc_policy!r}")
+        if self.order_policy not in ORDER_POLICIES:
+            raise ValueError(f"unknown order_policy {self.order_policy!r}")
+        if self.weights_key not in ("identity", "content"):
+            raise ValueError(f"unknown weights_key {self.weights_key!r}")
+        if self.gemm_kernel not in ("auto", "pallas", "vmap"):
+            raise ValueError(f"unknown gemm_kernel {self.gemm_kernel!r}")
+        if self.cache_size < 1:
+            raise ValueError("cache_size must be >= 1")
+
+
+# =========================================================================
+# Cache keys (pure functions of graph + config — shared with api shims)
+# =========================================================================
+
+def graph_signature(
+    graph: OpGraph,
+    alloc_policy: str = "opara",
+    order_policy: str = "opara",
+    hw: HardwareSpec = V5E,
+    max_lanes: int | None = None,
+    sim_cfg: SimConfig | None = None,
+) -> tuple:
+    """Structural cache key: everything scheduling reads, nothing it doesn't.
+
+    Per node: kind, edges, output shape/dtype, fusion signature, analytic
+    cost fields (including the derived ``resource_demand()`` the repacker
+    admits on), payload marker and const shapes (capture's stackability
+    inputs) — see :meth:`OpGraph.node_signature`, which memoizes the node
+    part per graph version.  The hydrated calibration fingerprint (if any)
+    is a separate component: measured timings change schedules, but they are
+    not part of the graph's structural identity.  ``sim_cfg`` (a frozen,
+    hashable :class:`SimConfig`) joins the key for autotuned plans — the
+    cost model's resource cap and penalties steer the search, so two
+    configs must never share a tuned plan.  Weight *values* and payload
+    identities are deliberately excluded — they cannot change a schedule.
+
+    The per-node part enters as :meth:`OpGraph.signature_digest` (memoized
+    sha1 of the full node tuple) so cache probes stay O(1) in graph size.
+    """
+    return (graph.signature_digest(), graph.calibration_fp,
+            alloc_policy, order_policy, hw, max_lanes, sim_cfg)
+
+
+def calibration_key(graph: OpGraph, inputs: Mapping[int, Any],
+                    hw: HardwareSpec = V5E) -> tuple:
+    """Calibration-cache key: structure × input geometry × hardware."""
+    return (graph.node_signature(), graph.input_signature(inputs), hw.name)
+
+
+def _content_digest(a: Any) -> tuple:
+    arr = np.asarray(a)
+    return (str(arr.dtype), arr.shape,
+            hashlib.sha1(arr.tobytes()).hexdigest())
+
+
+def _weights_fingerprint(graph: OpGraph, weights_key: str = "identity") -> tuple:
+    """Fingerprint of every payload + const array (executable cache key part).
+
+    ``identity`` — ``id()`` of callables and arrays (fast; live-object safe
+    because cached executables pin their graph).  ``content`` — code-object
+    identity for callables (stable across re-created lambdas from the same
+    source) + a byte digest of each const, so recreated-but-equal arrays
+    (checkpoint reload) share the executable.
+    """
+    if weights_key == "identity":
+        return tuple(
+            (id(n.fn), tuple(id(c) for c in n.meta.get("consts", ())))
+            for n in graph
+        )
+    if weights_key == "content":
+        return tuple(
+            (id(getattr(n.fn, "__code__", n.fn)),
+             tuple(_content_digest(c) for c in n.meta.get("consts", ())))
+            for n in graph
+        )
+    raise ValueError(f"unknown weights_key {weights_key!r}")
+
+
+def _autotune_key_parts(sim_cfg: SimConfig | None) -> tuple[str, str, SimConfig]:
+    """The autotuned-plan cache-key normalization, shared by the plan and
+    executable paths so their keys can never drift: policy slots carry a
+    sentinel (the tuner picks the real policies) and sim_cfg defaults the
+    same way :func:`repro.core.scheduler.autotune` does, so an explicit
+    default ``SimConfig()`` shares the implicit-``None`` entry."""
+    return "__autotune__", "__autotune__", sim_cfg or SimConfig()
+
+
+def _policy_parts(cfg: SessionConfig) -> tuple[str, str, SimConfig | None]:
+    """(alloc, order, sim_cfg) as they enter cache keys and the scheduler —
+    normalized through :func:`_autotune_key_parts` under autotune.  The ONE
+    source for both the plan-cache and executable-cache keys, so they stay
+    byte-identical by construction."""
+    if cfg.autotune:
+        return _autotune_key_parts(cfg.sim_cfg)
+    return cfg.alloc_policy, cfg.order_policy, cfg.sim_cfg
+
+
+def _plan_key(graph: OpGraph, cfg: SessionConfig) -> tuple:
+    alloc, order, sim_cfg = _policy_parts(cfg)
+    return graph_signature(graph, alloc, order, cfg.hw,
+                           cfg.max_lanes, sim_cfg)
+
+
+# =========================================================================
+# LRU + calibration disk tier primitives
+# =========================================================================
+
+def _lru_get(cache: OrderedDict, key: tuple) -> Any | None:
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key]
+    return None
+
+
+def _lru_put(cache: OrderedDict, key: tuple, value: Any,
+             max_entries: int = _CACHE_SIZE) -> None:
+    cache[key] = value
+    cache.move_to_end(key)
+    while len(cache) > max_entries:
+        cache.popitem(last=False)
+
+
+def _calib_dir(override: str | None = None) -> str:
+    return override or os.environ.get(_CALIB_DIR_ENV) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "calib")
+
+
+def _calib_path(key: tuple, dirpath: str | None = None) -> str:
+    digest = hashlib.sha1(repr(key).encode()).hexdigest()
+    return os.path.join(_calib_dir(dirpath), f"{digest}.json")
+
+
+def _calib_disk_load(key: tuple, dirpath: str | None = None) -> ProfileTable | None:
+    try:
+        with open(_calib_path(key, dirpath)) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if doc.get("key") != repr(key):   # sha1 collision / stale format
+        return None
+    return ProfileTable(
+        hw_name=doc["hw_name"],
+        measured_us=tuple((int(i), float(us)) for i, us in doc["measured_us"]))
+
+
+def _calib_disk_store(key: tuple, table: ProfileTable,
+                      dirpath: str | None = None,
+                      max_entries: int = _DISK_CACHE_MAX) -> None:
+    """Best-effort atomic write; serving must never fail on a full disk."""
+    d = _calib_dir(dirpath)
+    tmp = None
+    try:
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump({"key": repr(key), "hw_name": table.hw_name,
+                       "measured_us": [list(m) for m in table.measured_us]}, f)
+        os.replace(tmp, _calib_path(key, dirpath))
+        _calib_disk_evict(d, max_entries)
+    except OSError:
+        if tmp is not None:   # don't strand the temp file on a full disk
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+
+def _calib_disk_evict(d: str, max_entries: int = _DISK_CACHE_MAX) -> None:
+    """Drop oldest-mtime entries beyond ``max_entries`` (runs per store —
+    rare: stores happen only on full cache misses)."""
+    try:
+        entries = [e for e in os.scandir(d) if e.name.endswith(".json")]
+        if len(entries) <= max_entries:
+            return
+        entries.sort(key=lambda e: e.stat().st_mtime)
+        for e in entries[:len(entries) - max_entries]:
+            try:
+                os.unlink(e.path)
+            except OSError:
+                pass
+    except OSError:
+        pass
+
+
+# =========================================================================
+# CompiledModel
+# =========================================================================
+
+@dataclasses.dataclass
+class CompiledModel:
+    """Handle returned by :meth:`Session.compile`: plan + executable +
+    build provenance.  Calling it runs the fused program.
+
+    Holds the (immutable) :class:`SessionConfig` it was built under — NOT
+    the session itself, so a long-lived model handle never pins a discarded
+    session's caches alive."""
+
+    config: SessionConfig
+    graph: OpGraph
+    plan: SchedulePlan
+    executable: CapturedGraph
+    # "calibration": measured | memory | disk | off
+    # "plan" / "executable": hit | miss
+    provenance: dict[str, str]
+    timings_ms: dict[str, float]          # calibrate / plan / compile / total
+
+    def __call__(self, inputs: Mapping[str | int, Any]) -> list:
+        return self.executable(inputs)
+
+    @property
+    def stats(self) -> dict[str, float]:
+        """Packing/scheduling efficacy of the underlying plan."""
+        return self.plan.stats()
+
+    def explain(self) -> dict[str, Any]:
+        """Where this executable came from: per-stage wall times and, for
+        each cache tier, whether the build hit or missed (and for
+        calibration, whether the hit came from memory or disk)."""
+        cfg = self.config
+        p = self.plan
+        return {
+            "graph": {"name": self.graph.name, "n_ops": len(self.graph)},
+            "config": {
+                "hw": cfg.hw.name,
+                "alloc_policy": p.alloc_policy,   # tuned value under autotune
+                "order_policy": p.order_policy,
+                "autotune": cfg.autotune,
+                "gemm_kernel": cfg.gemm_kernel,
+                "weights_key": cfg.weights_key,
+            },
+            "cache": dict(self.provenance),
+            "stages_ms": dict(
+                self.timings_ms,
+                alloc=p.alloc_time_ms,
+                order=p.order_time_ms,
+                profile=p.profile_time_ms,
+                waves=p.wave_time_ms,
+                autotune=p.autotune_ms,
+            ),
+            "schedule": {
+                "n_streams": p.n_streams,
+                "n_waves": p.waves.n_waves,
+                "repacked": p.repacked,
+                "est_makespan_us": p.est_makespan_us,
+            },
+        }
+
+
+# =========================================================================
+# Session
+# =========================================================================
+
+class Session:
+    """Configuration-scoped compiler with isolated cache state.
+
+    ``Session(cfg)`` or ``Session(autotune=True, ...)`` (kwargs build /
+    override a :class:`SessionConfig`).  All methods read configuration from
+    ``self.config`` only; per-call data (graphs, profiling inputs, output
+    ids) stays in the call.
+    """
+
+    def __init__(self, config: SessionConfig | None = None, **overrides: Any):
+        base = config if config is not None else SessionConfig()
+        self.config = (dataclasses.replace(base, **overrides)
+                       if overrides else base)
+        self._plan_cache: OrderedDict[tuple, SchedulePlan] = OrderedDict()
+        self._exec_cache: OrderedDict[tuple, CapturedGraph] = OrderedDict()
+        self._calib_cache: OrderedDict[tuple, ProfileTable] = OrderedDict()
+        self._stats = {k: 0 for k in _STAT_KEYS}
+
+    # -- calibration --------------------------------------------------------
+    def calibrate(self, graph: OpGraph, inputs: Mapping[int, Any],
+                  repeats: int | None = None,
+                  load: bool | None = None) -> ProfileTable:
+        """Hydrate ``graph`` with a measured profile, timing at most once.
+
+        Memory-cache hit → the stored table is re-applied (zero re-timing);
+        memory miss → the disk tier is consulted (``load=False`` — or
+        ``SessionConfig.load_calibration=False`` — skips it, e.g. after a
+        runtime upgrade invalidates persisted timings); full miss → one
+        profiling inference (the paper's "profile each DNN inference only
+        once"), stored to both tiers for every structurally identical graph
+        — including one built by a later process — that follows.
+        """
+        table, _ = self._calibrate(graph, inputs, self.config,
+                                   repeats=repeats, load=load)
+        return table
+
+    def _calibrate(self, graph: OpGraph, inputs: Mapping[int, Any],
+                   cfg: SessionConfig, repeats: int | None = None,
+                   load: bool | None = None) -> tuple[ProfileTable, str]:
+        repeats = cfg.calibration_repeats if repeats is None else repeats
+        load = cfg.load_calibration if load is None else load
+        key = calibration_key(graph, inputs, cfg.hw)
+        provenance = "memory"
+        table = _lru_get(self._calib_cache, key)
+        if table is not None:
+            self._stats["calib_hits"] += 1            # memory-tier hit
+        elif load and (table := _calib_disk_load(key, cfg.calib_dir)) is not None:
+            self._stats["calib_disk_hits"] += 1       # disk-tier hit
+            provenance = "disk"
+            _lru_put(self._calib_cache, key, table, cfg.cache_size)
+        else:
+            self._stats["calib_misses"] += 1
+            provenance = "measured"
+            table = ModelProfiler(cfg.hw).measure(graph, inputs,
+                                                  repeats=repeats)
+            _lru_put(self._calib_cache, key, table, cfg.cache_size)
+            _calib_disk_store(key, table, cfg.calib_dir,
+                              cfg.disk_cache_entries)
+        if graph.calibration_fp != table.fingerprint:
+            apply_profile(graph, table)
+        return table, provenance
+
+    # -- planning -----------------------------------------------------------
+    def plan(self, graph: OpGraph,
+             measured_inputs: Mapping[int, Any] | None = None,
+             cache: bool = True) -> SchedulePlan:
+        """Cached scheduling under this session's config.  With
+        ``config.autotune`` the single-policy pipeline is replaced by the
+        simulator-guided search (``alloc_policy``/``order_policy`` are then
+        ignored — the tuner picks them); the search result lands in the same
+        plan cache, so the warm path costs the same either way.
+        ``measured_inputs`` routes through :meth:`calibrate` first."""
+        p, _ = self._plan(graph, self.config,
+                          measured_inputs=measured_inputs, cache=cache)
+        return p
+
+    def _plan(self, graph: OpGraph, cfg: SessionConfig,
+              measured_inputs: Mapping[int, Any] | None = None,
+              cache: bool = True) -> tuple[SchedulePlan, str]:
+        alloc, order, sim_cfg = _policy_parts(cfg)
+        if not cache:
+            if cfg.autotune:
+                return autotune_schedule(
+                    graph, hw=cfg.hw, cfg=sim_cfg, max_lanes=cfg.max_lanes,
+                    measured_inputs=measured_inputs), "uncached"
+            return schedule(
+                graph, alloc, order, cfg.hw, max_lanes=cfg.max_lanes,
+                measured_inputs=measured_inputs, sim_cfg=sim_cfg), "uncached"
+        if measured_inputs is not None:
+            self._calibrate(graph, measured_inputs, cfg)
+        key = _plan_key(graph, cfg)
+        hit = _lru_get(self._plan_cache, key)
+        if hit is not None:
+            self._stats["plan_hits"] += 1
+            if hit.graph is graph:
+                return hit, "hit"
+            # same structure, different graph object: rebind (op_ids match)
+            return dataclasses.replace(hit, graph=graph), "hit"
+        self._stats["plan_misses"] += 1
+        # measured timings (if any) are already hydrated onto node costs, so
+        # the plain pipeline schedules with them — no re-timing here.
+        if cfg.autotune:
+            p = autotune_schedule(graph, hw=cfg.hw, cfg=sim_cfg,
+                                  max_lanes=cfg.max_lanes)
+        else:
+            p = schedule(graph, alloc, order, cfg.hw,
+                         max_lanes=cfg.max_lanes, sim_cfg=sim_cfg)
+        _lru_put(self._plan_cache, key, p, cfg.cache_size)
+        return p, "miss"
+
+    # -- capture ------------------------------------------------------------
+    def optimize(self, graph: OpGraph, output_ids=None,
+                 cache: bool = True) -> CapturedGraph:
+        """Full pipeline → cached executable (plan + capture)."""
+        p, _ = self._plan(graph, self.config, cache=cache)
+        exe, _ = self._capture(graph, self.config, p,
+                               output_ids=output_ids, cache=cache)
+        return exe
+
+    def _capture(self, graph: OpGraph, cfg: SessionConfig, p: SchedulePlan,
+                 output_ids=None, cache: bool = True) -> tuple[CapturedGraph, str]:
+        if not cache:
+            return compile_plan(p, output_ids=output_ids,
+                                gemm_kernel=cfg.gemm_kernel), "uncached"
+        key = (
+            _plan_key(graph, cfg),   # byte-identical to the plan-cache key
+            cfg.weights_key,
+            _weights_fingerprint(graph, cfg.weights_key),
+            tuple(output_ids) if output_ids is not None else None,
+            cfg.gemm_kernel,
+        )
+        hit = _lru_get(self._exec_cache, key)
+        if hit is not None:
+            self._stats["exec_hits"] += 1
+            return hit, "hit"
+        self._stats["exec_misses"] += 1
+        exe = compile_plan(p, output_ids=output_ids,
+                           gemm_kernel=cfg.gemm_kernel)
+        _lru_put(self._exec_cache, key, exe, cfg.cache_size)
+        return exe, "miss"
+
+    # -- the one-call entry point -------------------------------------------
+    def compile(self, graph: OpGraph,
+                inputs: Mapping[int, Any] | None = None,
+                output_ids=None) -> CompiledModel:
+        """Run the whole pipeline and return a :class:`CompiledModel`.
+
+        ``inputs`` (optional) are profiling inputs: when given, the graph is
+        calibrated with measured timings first (cache-amortized).  The
+        returned handle exposes ``.plan``, ``.executable``, ``.stats`` and
+        ``.explain()`` — per-stage wall times plus, for every cache tier,
+        whether this build hit or missed.
+        """
+        cfg = self.config
+        t_total0 = time.perf_counter()
+        timings = {"calibrate": 0.0, "plan": 0.0, "compile": 0.0}
+        provenance = {"calibration": "off"}
+        if inputs is not None:
+            t0 = time.perf_counter()
+            _, provenance["calibration"] = self._calibrate(graph, inputs, cfg)
+            timings["calibrate"] = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        p, provenance["plan"] = self._plan(graph, cfg)
+        timings["plan"] = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        exe, provenance["executable"] = self._capture(graph, cfg, p,
+                                                      output_ids=output_ids)
+        timings["compile"] = (time.perf_counter() - t0) * 1e3
+        timings["total"] = (time.perf_counter() - t_total0) * 1e3
+        return CompiledModel(config=cfg, graph=graph, plan=p,
+                             executable=exe, provenance=provenance,
+                             timings_ms=timings)
+
+    # -- introspection / lifecycle ------------------------------------------
+    def cache_stats(self) -> dict[str, int]:
+        return dict(self._stats, plan_entries=len(self._plan_cache),
+                    exec_entries=len(self._exec_cache),
+                    calib_entries=len(self._calib_cache))
+
+    def clear_caches(self) -> None:
+        """Reset memory tiers + counters (the disk tier stays in place)."""
+        self._plan_cache.clear()
+        self._exec_cache.clear()
+        self._calib_cache.clear()
+        for k in self._stats:
+            self._stats[k] = 0
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        c = self.config
+        return (f"Session(hw={c.hw.name!r}, alloc={c.alloc_policy!r}, "
+                f"order={c.order_policy!r}, autotune={c.autotune}, "
+                f"entries={len(self._plan_cache)}p/"
+                f"{len(self._exec_cache)}e/{len(self._calib_cache)}c)")
+
+
+# =========================================================================
+# Process-wide default session (backs the legacy api shims)
+# =========================================================================
+
+_default_session: Session | None = None
+_default_session_lock = threading.Lock()
+
+
+def default_session() -> Session:
+    """The process-wide session the legacy :mod:`repro.core.api` functions
+    delegate to.  Created lazily with a default :class:`SessionConfig`.
+    Creation is locked: concurrent first callers (a serving fleet's engines
+    all defaulting to the shared session) must never observe two distinct
+    defaults with split cache state."""
+    global _default_session
+    if _default_session is None:
+        with _default_session_lock:
+            if _default_session is None:
+                _default_session = Session()
+    return _default_session
+
+
+def reset_default_session(config: SessionConfig | None = None) -> Session:
+    """Replace the default session with a fresh one (empty caches, zeroed
+    counters).  Tests use this to guarantee cross-test isolation."""
+    global _default_session
+    with _default_session_lock:
+        _default_session = Session(config)
+    return _default_session

@@ -18,11 +18,23 @@ from ..serving import InferenceEngine, Request
 
 
 def serve(arch: str, n_requests: int, max_tokens: int, slots: int = 4,
-          max_len: int = 128, temperature: float = 0.0) -> dict:
+          max_len: int = 128, temperature: float = 0.0,
+          calibrate: bool = False) -> dict:
     cfg = get_config(arch, smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    engine = InferenceEngine(model, params, max_slots=slots, max_len=max_len)
+    # one explicit Session for the whole serving process: every engine this
+    # driver spins up shares its measured-profile / schedule caches
+    from ..core import Session
+    session = Session()
+    engine = InferenceEngine(model, params, max_slots=slots, max_len=max_len,
+                             session=session, calibrate=calibrate)
+    if calibrate and engine.schedule_plan is not None:
+        p = engine.schedule_plan
+        print(f"[serve] opara schedule: streams={p.n_streams} "
+              f"waves={p.waves.n_waves} (calibration "
+              f"{session.cache_stats()['calib_misses']} timed / "
+              f"{session.cache_stats()['calib_hits']} cached)")
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for rid in range(n_requests):
@@ -51,8 +63,11 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measured-profile Opara schedule of the step graph")
     args = ap.parse_args(argv)
-    res = serve(args.arch, args.requests, args.max_tokens, args.slots)
+    res = serve(args.arch, args.requests, args.max_tokens, args.slots,
+                calibrate=args.calibrate)
     return 0 if res["completed"] == args.requests else 1
 
 

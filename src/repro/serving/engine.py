@@ -14,11 +14,15 @@ Batched decode across slots is itself operator parallelism — every slot's
 decode operators fuse into one wave, so the engine's throughput benefits
 from the same horizontal batching Opara applies inside a graph.
 
-``calibrate_schedule()`` ties the engine into the core measured-profile
-calibration cache: the engine's step graph is profiled once (real timings),
-and every subsequent engine instance / re-schedule with the same model
-structure, batch geometry and hardware hydrates from the cache instead of
-re-timing (paper §3.2, "profile each DNN inference only once").
+``calibrate_schedule()`` ties the engine into the measured-profile
+calibration cache of its :class:`repro.core.Session`: the engine's step
+graph is profiled once (real timings), and every subsequent engine instance
+/ re-schedule sharing that session with the same model structure, batch
+geometry and hardware hydrates from the cache instead of re-timing (paper
+§3.2, "profile each DNN inference only once").  Engines default to the
+process-wide :func:`repro.core.default_session`; a serving fleet that wants
+isolated (or differently configured) schedule state passes its own
+``session=Session(SessionConfig(...))``.
 """
 from __future__ import annotations
 
@@ -73,9 +77,14 @@ class Request:
 
 class InferenceEngine:
     def __init__(self, model: Model, params, max_slots: int = 4,
-                 max_len: int = 512, seed: int = 0, calibrate: bool = False):
+                 max_len: int = 512, seed: int = 0, calibrate: bool = False,
+                 session=None):
         self.model = model
         self.params = params
+        # repro.core.Session owning this engine's schedule/calibration cache
+        # state (None → the process-wide default session, so engines share
+        # measured profiles the way the module-global caches used to).
+        self.session = session
         self.cfg: ModelConfig = model.cfg
         self.max_slots = max_slots
         self.max_len = max_len
@@ -103,9 +112,10 @@ class InferenceEngine:
 
         Exports the model's operator DAG at this engine's decode geometry
         (batch = ``max_slots``), binds zero tokens as profiling inputs, and
-        plans through :func:`repro.core.api.plan` — so the single profiling
-        inference is amortized across every engine with an identical
-        signature (the paper's "profile each DNN inference only once").
+        plans through this engine's :class:`repro.core.Session` — so the
+        single profiling inference is amortized across every engine sharing
+        the session with an identical signature (the paper's "profile each
+        DNN inference only once").
 
         The returned plan (also kept on ``self.schedule_plan``) is
         introspection/analysis state — stream assignment, launch order and
@@ -115,15 +125,30 @@ class InferenceEngine:
         batched decode); the calibration's runtime win is that re-planning
         costs a cache lookup instead of a profiling inference.
         """
-        from ..core import api as opara
+        from ..core.session import default_session
         from ..models.opgraph_export import build_lm_opgraph
 
+        sess = self.session if self.session is not None else default_session()
         g = build_lm_opgraph(self.cfg, batch=self.max_slots, seq=seq,
                              params=self.params, n_layers=n_layers)
+        # measured calibration replays the graph, so every non-input node
+        # needs a payload.  The exporter threads params through dense (and
+        # MoE expert GEMM) layers only — cost-only operators without shapes
+        # (MoE dispatch/combine, hybrid mamba, rwkv scan) cannot be bound as
+        # profiling inputs; fail with a diagnosis instead of a shape error.
+        unbindable = [n.name for n in g
+                      if n.fn is None and n.out_shape is None]
+        if unbindable:
+            raise ValueError(
+                f"calibrate_schedule: {self.cfg.name!r} exports "
+                f"{len(unbindable)} cost-only operators without payloads "
+                f"(e.g. {unbindable[0]!r}) — measured calibration needs a "
+                "fully payload-backed graph (dense architectures); use "
+                "Session.plan() for an analytic schedule instead")
         inputs = {n.op_id: jnp.zeros(n.out_shape, jnp.int32)
                   for n in g if n.fn is None}
-        opara.calibrate(g, inputs, repeats=repeats)
-        self.schedule_plan = opara.plan(g)
+        sess.calibrate(g, inputs, repeats=repeats)
+        self.schedule_plan = sess.plan(g)
         return self.schedule_plan
 
     # -- API ---------------------------------------------------------------------

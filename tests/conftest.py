@@ -15,13 +15,24 @@ from repro.core.profiler import ModelProfiler, elementwise_cost, gemm_cost, norm
 
 
 @pytest.fixture(autouse=True)
-def _isolated_calib_disk(tmp_path, monkeypatch):
-    """Point the calibration cache's disk tier at a per-test directory.
+def _fresh_default_session(tmp_path, monkeypatch):
+    """Full cross-test isolation of the process-global compilation state.
 
-    Tests model-check the in-memory LRU counters; a populated
-    ``~/.cache/repro/calib`` from an earlier run (or test) would turn
-    expected misses into disk hits."""
+    * ``$REPRO_CALIB_DIR`` points at a per-test directory — tests
+      model-check the in-memory LRU counters, and a populated
+      ``~/.cache/repro/calib`` from an earlier run (or test) would turn
+      expected misses into disk hits;
+    * the default :class:`repro.core.Session` (which backs the legacy
+      ``repro.core.api`` shims) is replaced with a fresh one — empty
+      plan/exec/calib caches, zeroed counters — before AND after each test,
+      so no test needs ad-hoc ``clear_caches()`` bracketing and no test can
+      leak warm cache entries into the next."""
+    from repro.core.session import reset_default_session
+
     monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
+    reset_default_session()
+    yield
+    reset_default_session()
 
 
 @contextlib.contextmanager

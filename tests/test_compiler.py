@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api as opara
+from repro.core import Session
 from repro.core import (
     OpGraph,
     OpKind,
@@ -19,16 +19,14 @@ from repro.core.profiler import ModelProfiler
 from conftest import build_inception_like
 
 
-@pytest.fixture(autouse=True)
-def _fresh_caches():
-    opara.clear_caches()
-    yield
-    opara.clear_caches()
+@pytest.fixture
+def sess():
+    return Session()
 
 
 # -- executor correctness on real model graphs --------------------------------
 
-def test_compiled_executor_matches_sequential_on_model_graph():
+def test_compiled_executor_matches_sequential_on_model_graph(sess):
     """Captured outputs match the uncompiled sequential reference on a real
     opgraph_export model graph with fusion groups present."""
     from repro.configs import get_config
@@ -40,7 +38,7 @@ def test_compiled_executor_matches_sequential_on_model_graph():
     params = model.init(jax.random.key(0))
     g = build_lm_opgraph(cfg, batch=2, seq=8, params=params, n_layers=2)
 
-    exe = opara.optimize(g)
+    exe = sess.optimize(g)
     # fusion groups must actually be exercised (stacked steps present)
     stats = exe.program_stats()
     assert stats["n_vmap"] + stats["n_branch_gemm"] >= 1, stats
@@ -112,17 +110,17 @@ def test_slot_env_frees_dead_intermediates():
 
 # -- compiled-plan cache -------------------------------------------------------
 
-def test_plan_cache_hit_returns_identical_executable():
+def test_plan_cache_hit_returns_identical_executable(sess):
     g = build_inception_like(n_blocks=2, width=3, with_payloads=True)
-    e1 = opara.optimize(g)
-    e2 = opara.optimize(g)
+    e1 = sess.optimize(g)
+    e2 = sess.optimize(g)
     assert e1 is e2
-    stats = opara.cache_stats()
+    stats = sess.cache_stats()
     assert stats["exec_hits"] == 1 and stats["exec_misses"] == 1
     assert stats["plan_hits"] == 1 and stats["plan_misses"] == 1
 
 
-def test_second_schedule_does_zero_reprofiling(monkeypatch):
+def test_second_schedule_does_zero_reprofiling(monkeypatch, sess):
     calls = {"profile": 0}
     orig = ModelProfiler.profile
 
@@ -132,25 +130,25 @@ def test_second_schedule_does_zero_reprofiling(monkeypatch):
 
     monkeypatch.setattr(ModelProfiler, "profile", counting)
     g = build_inception_like(n_blocks=2, width=3, with_payloads=True)
-    opara.plan(g)
+    sess.plan(g)
     assert calls["profile"] == 1
-    opara.plan(g)
+    sess.plan(g)
     assert calls["profile"] == 1, "cache hit must not re-profile"
 
 
-def test_plan_cache_rebinds_structurally_equal_graph():
+def test_plan_cache_rebinds_structurally_equal_graph(sess):
     """Two separately-built graphs with the same structure but different
     weights share the schedule, NOT the executable — each output matches
     its own weights."""
     g1 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=1)
     g2 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=2)
-    p1 = opara.plan(g1)
-    p2 = opara.plan(g2)
-    assert opara.cache_stats()["plan_hits"] == 1
+    p1 = sess.plan(g1)
+    p2 = sess.plan(g2)
+    assert sess.cache_stats()["plan_hits"] == 1
     assert p2.graph is g2 and p1.graph is g1
     assert p1.order == p2.order
 
-    e1, e2 = opara.optimize(g1), opara.optimize(g2)
+    e1, e2 = sess.optimize(g1), sess.optimize(g2)
     assert e1 is not e2, "different weights must not share an executable"
     x = jnp.ones((8, 64), jnp.float32)
     for g, e in ((g1, e1), (g2, e2)):
@@ -161,10 +159,11 @@ def test_plan_cache_rebinds_structurally_equal_graph():
 
 
 def test_graph_mutation_changes_signature():
+    from repro.core import graph_signature
     g = build_inception_like(n_blocks=2, width=3, with_payloads=False)
-    sig1 = opara.graph_signature(g)
+    sig1 = graph_signature(g)
     g.add("extra", OpKind.ELEMENTWISE, [0])
-    assert opara.graph_signature(g) != sig1
+    assert graph_signature(g) != sig1
 
 
 def test_content_weights_key_reuses_executable_on_reload():
@@ -174,19 +173,21 @@ def test_content_weights_key_reuses_executable_on_reload():
     g1 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=5)
     g2 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=5)
 
-    e1 = opara.optimize(g1, weights_key="content")
-    e2 = opara.optimize(g2, weights_key="content")
+    content = Session(weights_key="content")
+    e1 = content.optimize(g1)
+    e2 = content.optimize(g2)
     assert e1 is e2, "identical weight content must share the executable"
-    assert opara.cache_stats()["exec_hits"] == 1
+    assert content.cache_stats()["exec_hits"] == 1
 
     # identity mode on the same pair: arrays are distinct objects → miss
-    i1 = opara.optimize(g1)
-    i2 = opara.optimize(g2)
+    identity = Session()
+    i1 = identity.optimize(g1)
+    i2 = identity.optimize(g2)
     assert i1 is not i2
 
     # different weight values must NOT collide in content mode
     g3 = build_inception_like(n_blocks=2, width=3, with_payloads=True, seed=6)
-    e3 = opara.optimize(g3, weights_key="content")
+    e3 = content.optimize(g3)
     assert e3 is not e1
     # and the shared executable computes with the weights it closed over
     x = jnp.ones((8, 64), jnp.float32)
@@ -197,8 +198,12 @@ def test_content_weights_key_reuses_executable_on_reload():
 
 
 def test_weights_key_rejects_unknown_mode():
-    g = build_inception_like(n_blocks=1, width=2, with_payloads=True)
+    from repro.core import SessionConfig
     with pytest.raises(ValueError):
+        SessionConfig(weights_key="values")
+    g = build_inception_like(n_blocks=1, width=2, with_payloads=True)
+    with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
+        import repro.core.api as opara
         opara.optimize(g, weights_key="values")
 
 

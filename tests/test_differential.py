@@ -1,6 +1,7 @@
 """Differential correctness: compiled programs vs naive sequential execution.
 
-Every paper-workload topology from ``benchmarks/workloads.py`` is made
+Every paper-workload topology from ``benchmarks/workloads.py`` — plus
+exporter-built architecture graphs (``models/opgraph_export``) — is made
 executable via ``attach_payloads`` (real branch structure, small uniform
 payloads) and the full Opara pipeline's output is checked against plain
 topo-order op-by-op execution — in analytic and measured modes, cold and
@@ -9,18 +10,19 @@ scheduling/fusion/capture change that alters program SEMANTICS fails here.
 
 Depth-parameterized workloads run shallow variants to keep the suite fast;
 the graph builders and payload attachment are identical to the full-size
-benchmarks.
+benchmarks.  Each test drives an explicit :class:`repro.core.Session`, so
+cache expectations are local to the test by construction.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api as opara, run_sequential_uncompiled
-from repro.core import detach_profile
+from repro.core import Session, detach_profile, run_sequential_uncompiled
 
 from conftest import count_measure_calls
 
 from benchmarks.workloads import (
+    arch_workload,
     attach_payloads,
     bert_like,
     googlenet_like,
@@ -30,20 +32,25 @@ from benchmarks.workloads import (
 
 D, TOKENS = 32, 4
 
-# Shallow-where-possible variants of every PAPER_WORKLOADS entry.
+# Shallow-where-possible variants of every PAPER_WORKLOADS entry, plus
+# exporter-built arch graphs: one dense LM (QKV / gate∥up branches) and one
+# MoE LM (expert fan-out + dispatch/combine scatter nodes) so the compiled
+# executor is differentially checked on graphs the exporter actually emits,
+# not only the hand-built paper topologies.
 WORKLOADS = {
     "googlenet": lambda: googlenet_like(1),
     "inception-v3": lambda: inception_v3_like(1),
     "bert": lambda: bert_like(1, seq=4, n_layers=2),
     "t5": lambda: t5_like(1, seq=4, n_layers=2),
+    "arch-qwen2": lambda: arch_workload("qwen2-0.5b", seq=4, n_layers=2),
+    "arch-kimi-moe": lambda: arch_workload("kimi-k2-1t-a32b", seq=4,
+                                           n_layers=2),
 }
 
 
-@pytest.fixture(autouse=True)
-def _fresh_caches():
-    opara.clear_caches()
-    yield
-    opara.clear_caches()
+@pytest.fixture
+def sess():
+    return Session()
 
 
 def _build(name, seed=0):
@@ -64,77 +71,97 @@ def _assert_matches(got, ref):
 
 
 @pytest.mark.parametrize("name", sorted(WORKLOADS))
-def test_differential_analytic_cold_and_warm(name):
+def test_differential_analytic_cold_and_warm(name, sess):
     g, inputs, _ = _build(name)
     ref = run_sequential_uncompiled(g, inputs)
-    exe_cold = opara.optimize(g)
+    exe_cold = sess.optimize(g)
     _assert_matches(exe_cold(inputs), ref)
-    exe_warm = opara.optimize(g)
+    exe_warm = sess.optimize(g)
     assert exe_warm is exe_cold, "warm optimize must hit the executable cache"
     _assert_matches(exe_warm(inputs), ref)
-    stats = opara.cache_stats()
+    stats = sess.cache_stats()
     assert stats["plan_hits"] >= 1 and stats["exec_hits"] == 1
 
 
 @pytest.mark.parametrize("name", sorted(WORKLOADS))
-def test_differential_measured_cold_and_warm(name):
+def test_differential_measured_cold_and_warm(name, sess):
     g, inputs, minputs = _build(name)
     ref = run_sequential_uncompiled(g, inputs)
 
     # cold: one profiling inference hydrates the graph, then schedule+capture
-    opara.calibrate(g, minputs, repeats=1)
-    opara.plan(g, measured_inputs=minputs)
+    sess.calibrate(g, minputs, repeats=1)
+    sess.plan(g, measured_inputs=minputs)
     assert g.calibration_fp is not None
-    exe_cold = opara.optimize(g)
+    exe_cold = sess.optimize(g)
     _assert_matches(exe_cold(inputs), ref)
 
     # warm: same-signature re-schedule does zero re-timing
     with count_measure_calls() as timing:
-        opara.plan(g, measured_inputs=minputs)
-        exe_warm = opara.optimize(g)
+        sess.plan(g, measured_inputs=minputs)
+        exe_warm = sess.optimize(g)
     assert timing["n"] == 0, "warm measured schedule must not re-time"
     assert exe_warm is exe_cold
     _assert_matches(exe_warm(inputs), ref)
-    stats = opara.cache_stats()
+    stats = sess.cache_stats()
     assert stats["calib_hits"] >= 2 and stats["calib_misses"] == 1
 
     # detaching the profile returns the graph to its analytic identity
     table = detach_profile(g)
     assert table is not None and g.calibration_fp is None
-    exe_analytic = opara.optimize(g)
+    exe_analytic = sess.optimize(g)
     assert exe_analytic is not exe_cold
     _assert_matches(exe_analytic(inputs), ref)
 
 
-def test_calibration_survives_checkpoint_reload():
+def test_calibration_survives_checkpoint_reload(sess):
     """A structurally identical rebuilt graph (the reloaded-checkpoint
     scenario) hydrates from the calibration cache: zero re-timing, warm
-    plan-cache path — the acceptance criterion for this PR."""
+    plan-cache path."""
     g1, _, minputs = _build("bert")
     with count_measure_calls() as timing:
-        p1 = opara.plan(g1, measured_inputs=minputs)
+        p1 = sess.plan(g1, measured_inputs=minputs)
         assert timing["n"] == 1
 
         g2, inputs2, minputs2 = _build("bert")  # fresh object, same structure
         assert g2 is not g1
-        p2 = opara.plan(g2, measured_inputs=minputs2)
+        p2 = sess.plan(g2, measured_inputs=minputs2)
     assert timing["n"] == 1, "reloaded graph must reuse the measured profile"
-    stats = opara.cache_stats()
+    stats = sess.cache_stats()
     assert stats["calib_hits"] == 1 and stats["calib_misses"] == 1
     assert stats["plan_hits"] == 1 and stats["plan_misses"] == 1
     assert p2.graph is g2 and p2.order == p1.order
     # hydrated timings are byte-identical to the measured originals
     assert g2.calibration_fp == g1.calibration_fp
     ref = run_sequential_uncompiled(g2, inputs2)
-    _assert_matches(opara.optimize(g2)(inputs2), ref)
+    _assert_matches(sess.optimize(g2)(inputs2), ref)
 
 
-def test_measured_and_analytic_plans_do_not_collide():
+def test_measured_and_analytic_plans_do_not_collide(sess):
     """Same structure, one calibrated and one not → distinct plan entries."""
+    from repro.core import graph_signature
     g1, _, minputs = _build("bert")
     g2, _, _ = _build("bert")
-    opara.plan(g1, measured_inputs=minputs)
-    opara.plan(g2)  # analytic
-    stats = opara.cache_stats()
+    sess.plan(g1, measured_inputs=minputs)
+    sess.plan(g2)  # analytic
+    stats = sess.cache_stats()
     assert stats["plan_misses"] == 2 and stats["plan_hits"] == 0
-    assert opara.graph_signature(g1) != opara.graph_signature(g2)
+    assert graph_signature(g1) != graph_signature(g2)
+
+
+def test_attach_payloads_strips_branch_gemm_markers():
+    """Exporter graphs carry payload="matmul" markers on GEMM nodes; the
+    generic differential payload is not a matmul, so attachment must remove
+    the marker — otherwise capture would route stacked groups to the fused
+    GEMM kernel and compute the wrong function."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.models.opgraph_export import build_lm_opgraph
+
+    cfg = get_config("kimi-k2-1t-a32b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    g = build_lm_opgraph(cfg, batch=1, seq=4, params=params, n_layers=2)
+    assert any(n.meta.get("payload") == "matmul" for n in g)
+    attach_payloads(g, d=D, tokens=TOKENS)
+    assert not any("payload" in n.meta for n in g)

@@ -14,6 +14,8 @@ Plus: the estimate/simulate agreement and speed contract, autotune's
 min-makespan guarantee over its candidate space, the api-level autotune
 plan cache, and the calibration cache's disk tier.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -26,7 +28,7 @@ from repro.core import (
     schedule,
     simulate,
 )
-from repro.core import api as opara
+from repro.core import Session, SessionConfig
 from repro.core.fusion import fusion_stats
 from repro.core.graph import IntensityClass
 from repro.core.launch_order import ORDER_POLICIES, validate_order
@@ -56,13 +58,6 @@ PAPER_TOPOLOGIES = {
 }
 
 TIGHT = SimConfig(resource_cap=24e6, sync_us=0.5, head_of_line=True)
-
-
-@pytest.fixture(autouse=True)
-def _fresh_caches():
-    opara.clear_caches()
-    yield
-    opara.clear_caches()
 
 
 def _check_repack_invariants(g, cfg):
@@ -255,64 +250,77 @@ def test_autotune_stats_surface_repack_efficacy():
     assert s["n_candidates"] >= 4
 
 
-def test_api_plan_autotune_caches_by_sim_cfg():
+def test_session_plan_autotune_caches_by_sim_cfg():
     g = build_inception_like(n_blocks=2, width=3, with_payloads=False)
     cfg_a = SimConfig(resource_cap=24e6, head_of_line=True)
     cfg_b = SimConfig(resource_cap=200e6, head_of_line=True)
-    p1 = opara.plan(g, autotune=True, sim_cfg=cfg_a)
-    assert opara.cache_stats()["plan_misses"] == 1
-    p2 = opara.plan(g, autotune=True, sim_cfg=cfg_a)
+    sess = Session(autotune=True, sim_cfg=cfg_a)
+    p1 = sess.plan(g)
+    assert sess.cache_stats()["plan_misses"] == 1
+    p2 = sess.plan(g)
     assert p2 is p1
-    assert opara.cache_stats()["plan_hits"] == 1
-    opara.plan(g, autotune=True, sim_cfg=cfg_b)     # different cost model
-    assert opara.cache_stats()["plan_misses"] == 2
-    opara.plan(g)                                    # single-policy: distinct
-    assert opara.cache_stats()["plan_misses"] == 3
+    assert sess.cache_stats()["plan_hits"] == 1
+    # same session state, different cost model → distinct tuned plan.  The
+    # api shims route per-call config overrides through the same private
+    # entry points, so this mirrors the legacy plan(autotune=True, sim_cfg=)
+    sess._plan(g, dataclasses.replace(sess.config, sim_cfg=cfg_b))
+    assert sess.cache_stats()["plan_misses"] == 2
+    sess._plan(g, dataclasses.replace(sess.config, autotune=False))
+    assert sess.cache_stats()["plan_misses"] == 3
 
 
-def test_calibration_survives_memory_clear_via_disk(tmp_path, monkeypatch):
-    """Process-restart analogue: clear_caches() drops the memory tier, the
-    disk tier rehydrates without re-timing."""
+def test_calibration_survives_memory_clear_via_disk(tmp_path):
+    """Process-restart analogue: a second Session (or clear_caches()) drops
+    the memory tier, the shared disk tier rehydrates without re-timing."""
     import jax.numpy as jnp
     from conftest import count_measure_calls
-    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
     g = build_inception_like(n_blocks=1, width=2)
     inputs = {0: jnp.ones((8, 64), jnp.float32)}
+    sess = Session(calib_dir=str(tmp_path / "calib"))
     with count_measure_calls() as calls:
-        t1 = opara.calibrate(g, inputs, repeats=1)
+        t1 = sess.calibrate(g, inputs, repeats=1)
         assert calls["n"] == 1
-        opara.clear_caches()                 # "restart"
-        t2 = opara.calibrate(g, inputs, repeats=1)
+        sess.clear_caches()                 # "restart"
+        t2 = sess.calibrate(g, inputs, repeats=1)
         assert calls["n"] == 1, "disk tier must prevent re-timing"
+        # a brand-new session pointed at the same disk tier also rehydrates
+        sess2 = Session(calib_dir=str(tmp_path / "calib"))
+        sess2.calibrate(g, inputs, repeats=1)
+        assert calls["n"] == 1
     assert t2.measured_us == t1.measured_us
-    stats = opara.cache_stats()   # counters were reset by the "restart"
+    stats = sess.cache_stats()   # counters were reset by the "restart"
     assert stats["calib_disk_hits"] == 1 and stats["calib_misses"] == 0
 
 
-def test_calibration_load_false_skips_disk(tmp_path, monkeypatch):
+def test_calibration_load_false_skips_disk(tmp_path):
     import jax.numpy as jnp
     from conftest import count_measure_calls
-    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
     g = build_inception_like(n_blocks=1, width=2)
     inputs = {0: jnp.ones((8, 64), jnp.float32)}
+    sess = Session(calib_dir=str(tmp_path / "calib"))
     with count_measure_calls() as calls:
-        opara.calibrate(g, inputs, repeats=1)
-        opara.clear_caches()
-        opara.plan(g, measured_inputs=inputs, load=False)   # escape hatch
-        assert calls["n"] == 2, "load=False must force a fresh measurement"
-    assert opara.cache_stats()["calib_disk_hits"] == 0
+        sess.calibrate(g, inputs, repeats=1)
+        sess.clear_caches()
+        # escape hatch: SessionConfig(load_calibration=False) — e.g. after a
+        # runtime upgrade invalidates persisted timings
+        cold = Session(calib_dir=str(tmp_path / "calib"),
+                       load_calibration=False)
+        cold.plan(g, measured_inputs=inputs)
+        assert calls["n"] == 2, "load_calibration=False must re-measure"
+    assert cold.cache_stats()["calib_disk_hits"] == 0
 
 
-def test_calibration_disk_corruption_falls_back(tmp_path, monkeypatch):
+def test_calibration_disk_corruption_falls_back(tmp_path):
     import jax.numpy as jnp
-    from repro.core.api import _calib_path, calibration_key
-    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
+    from repro.core.session import _calib_path, calibration_key
+    calib_dir = str(tmp_path / "calib")
     g = build_inception_like(n_blocks=1, width=2)
     inputs = {0: jnp.ones((8, 64), jnp.float32)}
-    opara.calibrate(g, inputs, repeats=1)
-    path = _calib_path(calibration_key(g, inputs, V5E))
+    sess = Session(calib_dir=calib_dir)
+    sess.calibrate(g, inputs, repeats=1)
+    path = _calib_path(calibration_key(g, inputs, V5E), calib_dir)
     with open(path, "w") as f:
         f.write("{not json")
-    opara.clear_caches()
-    opara.calibrate(g, inputs, repeats=1)    # must re-measure, not crash
-    assert opara.cache_stats()["calib_misses"] == 1
+    sess.clear_caches()
+    sess.calibrate(g, inputs, repeats=1)    # must re-measure, not crash
+    assert sess.cache_stats()["calib_misses"] == 1

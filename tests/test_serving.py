@@ -67,27 +67,56 @@ def test_eos_terminates(small_model):
 
 
 def test_engine_reschedule_hits_calibration_cache(small_model):
-    """First engine profiles its step graph once; a second engine (same
-    model structure + batch geometry) and an in-place re-schedule both
-    hydrate from the calibration cache — zero re-timing."""
-    from repro.core import api as opara
+    """First engine profiles its step graph once; a second engine sharing
+    the session (same model structure + batch geometry) and an in-place
+    re-schedule both hydrate from the calibration cache — zero re-timing."""
+    from repro.core import Session
     from conftest import count_measure_calls
 
     cfg, model, params = small_model
-    opara.clear_caches()
-    try:
-        with count_measure_calls() as timing:
-            e1 = InferenceEngine(model, params, max_slots=2, max_len=32)
-            p1 = e1.calibrate_schedule(n_layers=1)
-            assert timing["n"] == 1 and p1 is e1.schedule_plan
+    sess = Session()
+    with count_measure_calls() as timing:
+        e1 = InferenceEngine(model, params, max_slots=2, max_len=32,
+                             session=sess)
+        p1 = e1.calibrate_schedule(n_layers=1)
+        assert timing["n"] == 1 and p1 is e1.schedule_plan
 
-            e2 = InferenceEngine(model, params, max_slots=2, max_len=32)
-            p2 = e2.calibrate_schedule(n_layers=1)   # warm: cache-served
-            p1b = e1.calibrate_schedule(n_layers=1)  # re-schedule: also warm
-    finally:
-        opara.clear_caches()
+        e2 = InferenceEngine(model, params, max_slots=2, max_len=32,
+                             session=sess)
+        p2 = e2.calibrate_schedule(n_layers=1)   # warm: cache-served
+        p1b = e1.calibrate_schedule(n_layers=1)  # re-schedule: also warm
     assert timing["n"] == 1, "serving re-schedules must not re-time"
     assert p2.order == p1.order == p1b.order
+    stats = sess.cache_stats()
+    assert stats["calib_misses"] == 1 and stats["calib_hits"] == 2
+
+
+def test_engine_without_session_uses_default(small_model):
+    """Engines constructed without an explicit session share the process
+    default (the legacy module-global behavior)."""
+    from repro.core import default_session
+    from conftest import count_measure_calls
+
+    cfg, model, params = small_model
+    with count_measure_calls() as timing:
+        e1 = InferenceEngine(model, params, max_slots=2, max_len=32)
+        e1.calibrate_schedule(n_layers=1)
+        e2 = InferenceEngine(model, params, max_slots=2, max_len=32)
+        e2.calibrate_schedule(n_layers=1)
+    assert timing["n"] == 1
+    assert default_session().cache_stats()["calib_hits"] >= 1
+
+
+def test_calibrate_schedule_rejects_partially_payloaded_arch():
+    """Non-dense exports (MoE dispatch/combine, hybrid, rwkv) have cost-only
+    operators without payloads — measured calibration must fail with a
+    diagnosis, not a shape error deep in the profiler."""
+    cfg = get_config("kimi-k2-1t-a32b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, max_slots=2, max_len=32)
+    with pytest.raises(ValueError, match="cost-only operators"):
+        engine.calibrate_schedule(n_layers=2)
 
 
 def test_sampler_modes():

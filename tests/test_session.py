@@ -1,0 +1,244 @@
+"""`opara.Session`: config-scoped compilation, cache isolation, explain(),
+and the deprecation behavior of the legacy ``repro.core.api`` shims."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompiledModel,
+    Session,
+    SessionConfig,
+    SimConfig,
+    default_session,
+    reset_default_session,
+    run_sequential_uncompiled,
+)
+from repro.core import api as opara
+from repro.core.profiler import HardwareSpec
+
+from conftest import build_inception_like, count_measure_calls
+
+
+def _inputs(g):
+    return {n.op_id: jnp.ones((8, 64), jnp.float32) for n in g if n.fn is None}
+
+
+# -- SessionConfig -------------------------------------------------------------
+
+def test_session_config_is_frozen_hashable_and_validating():
+    cfg = SessionConfig(autotune=True, sim_cfg=SimConfig(resource_cap=1e6))
+    assert hash(cfg) == hash(dataclasses.replace(cfg))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.autotune = False
+    with pytest.raises(ValueError):
+        SessionConfig(alloc_policy="bogus")
+    with pytest.raises(ValueError):
+        SessionConfig(order_policy="bogus")
+    with pytest.raises(ValueError):
+        SessionConfig(gemm_kernel="bogus")
+    with pytest.raises(ValueError):
+        SessionConfig(cache_size=0)
+
+
+def test_session_kwarg_overrides_build_config():
+    base = SessionConfig(autotune=True)
+    s = Session(base, order_policy="topo")
+    assert s.config.autotune and s.config.order_policy == "topo"
+    assert base.order_policy == "opara"          # original untouched
+    assert Session(hw=HardwareSpec(name="x")).config.hw.name == "x"
+
+
+# -- compile() / CompiledModel -------------------------------------------------
+
+def test_compile_returns_working_model_with_cold_then_warm_provenance():
+    sess = Session()
+    g = build_inception_like(n_blocks=3, width=4)
+    x = jnp.ones((8, 64), jnp.float32)
+
+    cold = sess.compile(g)
+    assert isinstance(cold, CompiledModel)
+    assert cold.provenance == {"calibration": "off", "plan": "miss",
+                               "executable": "miss"}
+    np.testing.assert_allclose(
+        np.asarray(cold({"x": x})[0]),
+        np.asarray(run_sequential_uncompiled(g, {"x": x})[0]),
+        rtol=1e-5, atol=1e-5)
+
+    warm = sess.compile(g)
+    assert warm.provenance == {"calibration": "off", "plan": "hit",
+                               "executable": "hit"}
+    assert warm.executable is cold.executable
+    assert warm.plan is cold.plan
+
+
+def test_explain_reports_stages_and_cache_provenance():
+    sess = Session()
+    g = build_inception_like(n_blocks=2, width=3)
+    cold = sess.compile(g, inputs=_inputs(g))
+    rep = cold.explain()
+    assert rep["cache"] == {"calibration": "measured", "plan": "miss",
+                            "executable": "miss"}
+    assert rep["graph"]["n_ops"] == len(g)
+    assert rep["config"]["hw"] == sess.config.hw.name
+    for stage in ("calibrate", "plan", "compile", "total",
+                  "alloc", "order", "profile", "waves", "autotune"):
+        assert stage in rep["stages_ms"], stage
+    assert rep["stages_ms"]["total"] >= rep["stages_ms"]["plan"]
+    assert rep["schedule"]["n_streams"] >= 1
+
+    warm = sess.compile(g, inputs=_inputs(g)).explain()
+    assert warm["cache"] == {"calibration": "memory", "plan": "hit",
+                             "executable": "hit"}
+
+    # a fresh session sharing only the disk tier: calibration rehydrates
+    # from disk, plan/executable recompile
+    sess2 = Session()
+    disk = sess2.compile(g, inputs=_inputs(g)).explain()
+    assert disk["cache"]["calibration"] == "disk"
+    assert disk["cache"]["plan"] == "miss"
+
+
+def test_compiled_model_stats_match_plan():
+    sess = Session()
+    g = build_inception_like(n_blocks=2, width=3)
+    m = sess.compile(g)
+    assert m.stats == m.plan.stats()
+
+
+def test_autotuned_session_compile_and_explain():
+    sess = Session(autotune=True,
+                   sim_cfg=SimConfig(resource_cap=24e6, head_of_line=True))
+    g = build_inception_like(n_blocks=3, width=4)
+    m = sess.compile(g)
+    assert m.plan.n_candidates >= 2
+    rep = m.explain()
+    assert rep["config"]["autotune"] is True
+    # the tuned policies are reported, not the config defaults' sentinel
+    assert rep["config"]["alloc_policy"] in ("opara", "nimble", "sequential")
+    x = jnp.ones((8, 64), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(m({"x": x})[0]),
+        np.asarray(run_sequential_uncompiled(g, {"x": x})[0]),
+        rtol=1e-5, atol=1e-5)
+    assert sess.compile(g).provenance["plan"] == "hit"
+
+
+# -- isolation -----------------------------------------------------------------
+
+def test_sessions_with_different_configs_never_share_entries():
+    """Two sessions (different configs) compile the same graph: neither sees
+    the other's plan/exec/calib entries."""
+    g = build_inception_like(n_blocks=2, width=3)
+    s1 = Session()
+    s2 = Session(order_policy="topo")
+
+    s1.compile(g, inputs=_inputs(g))
+    assert s1.cache_stats()["plan_entries"] == 1
+    assert s2.cache_stats() == {k: 0 for k in s2.cache_stats()}
+
+    m2 = s2.compile(g)
+    assert m2.provenance["plan"] == "miss", "s2 must not see s1's plan"
+    assert s2.cache_stats()["plan_hits"] == 0
+    assert s1.cache_stats()["plan_entries"] == 1
+    assert s2.cache_stats()["plan_entries"] == 1
+
+
+def test_sessions_with_equal_configs_still_isolated():
+    """Isolation is per-instance, not per-config-value."""
+    g = build_inception_like(n_blocks=2, width=3)
+    s1, s2 = Session(), Session()
+    s1.optimize(g)
+    exe2 = s2.optimize(g)
+    assert s2.cache_stats()["exec_misses"] == 1
+    assert s2.cache_stats()["exec_hits"] == 0
+    assert exe2 is not s1.optimize(g)
+
+
+def test_clear_caches_on_one_session_leaves_the_other_warm():
+    g = build_inception_like(n_blocks=2, width=3)
+    s1, s2 = Session(), Session()
+    s1.compile(g, inputs=_inputs(g))
+    s2.compile(g, inputs=_inputs(g))
+    s1.clear_caches()
+    assert s1.cache_stats()["plan_entries"] == 0
+
+    warm = s2.compile(g, inputs=_inputs(g))
+    assert warm.provenance == {"calibration": "memory", "plan": "hit",
+                               "executable": "hit"}
+    # and s1 really is cold again (modulo the shared disk tier)
+    cold = s1.compile(g, inputs=_inputs(g))
+    assert cold.provenance["plan"] == "miss"
+    assert cold.provenance["calibration"] == "disk"
+
+
+def test_session_calibration_does_not_retime_across_sessions_only_via_disk():
+    """Memory tiers are isolated: a second session re-times unless the disk
+    tier (shared by construction when calib_dir matches) serves it."""
+    g = build_inception_like(n_blocks=1, width=2)
+    s1 = Session(load_calibration=False)
+    s2 = Session(load_calibration=False)
+    with count_measure_calls() as calls:
+        s1.calibrate(g, _inputs(g), repeats=1)
+        s2.calibrate(g, _inputs(g), repeats=1)
+    assert calls["n"] == 2, "isolated memory tiers must both measure"
+
+
+# -- default session + legacy shims --------------------------------------------
+
+def test_default_session_backs_api_shims():
+    g = build_inception_like(n_blocks=2, width=3)
+    p = opara.plan(g)
+    assert default_session().cache_stats()["plan_misses"] == 1
+    assert default_session().plan(g) is p
+    opara.clear_caches()
+    assert opara.cache_stats()["plan_entries"] == 0
+
+
+def test_reset_default_session_swaps_state():
+    g = build_inception_like(n_blocks=2, width=3)
+    opara.plan(g)
+    old = default_session()
+    new = reset_default_session()
+    assert new is default_session() and new is not old
+    assert new.cache_stats()["plan_entries"] == 0
+
+
+def test_api_shims_warn_on_superseded_kwargs_only():
+    import warnings
+    g = build_inception_like(n_blocks=2, width=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # plain calls: no warning
+        opara.plan(g)
+        opara.optimize(g)
+        opara.plan(g, measured_inputs=_inputs(g))   # per-call data: silent
+        opara.calibrate(g, _inputs(g), repeats=1)
+    with pytest.warns(DeprecationWarning, match="alloc_policy"):
+        opara.plan(g, alloc_policy="nimble")
+    with pytest.warns(DeprecationWarning, match="weights_key"):
+        opara.optimize(g, weights_key="content")
+    with pytest.warns(DeprecationWarning, match="hw"):
+        opara.calibrate(g, _inputs(g), hw=default_session().config.hw,
+                        repeats=1)
+
+
+def test_api_shim_kwargs_still_delegate_correctly():
+    """The deprecated spellings keep working — distinct config → distinct
+    cache entries in the default session, same values → shared entry."""
+    g = build_inception_like(n_blocks=2, width=3)
+    with pytest.warns(DeprecationWarning):
+        p_topo = opara.plan(g, order_policy="topo")
+    p_def = opara.plan(g)
+    assert p_topo.order_policy == "topo" and p_def.order_policy == "opara"
+    assert default_session().cache_stats()["plan_misses"] == 2
+    with pytest.warns(DeprecationWarning):
+        assert opara.plan(g, order_policy="topo") is p_topo
+
+
+def test_session_cache_size_bounds_plan_entries():
+    sess = Session(cache_size=2)
+    for blocks in (1, 2, 3, 4):
+        sess.plan(build_inception_like(n_blocks=blocks, width=2,
+                                       with_payloads=False))
+    assert sess.cache_stats()["plan_entries"] == 2
