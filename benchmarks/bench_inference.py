@@ -11,7 +11,7 @@ from repro.core import (Session, SimConfig, compare_policies, compile_plan,
                         schedule)
 from repro.core.profiler import HardwareSpec
 
-from .workloads import PAPER_WORKLOADS, arch_workload
+from .workloads import PAPER_WORKLOADS, arch_workload, moe_ragged_workload
 
 # structured records picked up by benchmarks/run.py → BENCH_inference.json
 RECORDS: list[dict] = []
@@ -45,6 +45,9 @@ def run(batch: int = 1) -> list[str]:
             graphs[arch] = arch_workload(arch, batch=batch)
         except Exception:
             continue
+    # the grouped ragged-M fan-out (routed MoE) — the paper's hardest
+    # uneven-branch case, gated alongside the uniform kimi topology
+    graphs["kimi-moe-ragged"] = moe_ragged_workload(batch=batch)
     # one autotuning session for the whole sweep — each workload's search
     # runs once and lands in the session's plan cache (the serving pattern)
     tune_sess = Session(hw=BENCH_HW, sim_cfg=BENCH_SIM, autotune=True)

@@ -19,7 +19,7 @@ from repro.core.nimble import allocate_streams_nimble
 from repro.core.stream_alloc import allocate_streams
 
 from .conftest_shim import build_payload_graph
-from .workloads import PAPER_WORKLOADS, arch_workload
+from .workloads import PAPER_WORKLOADS, arch_workload, moe_ragged_workload
 
 # structured records picked up by benchmarks/run.py → BENCH_scheduler.json
 RECORDS: list[dict] = []
@@ -39,6 +39,7 @@ def run() -> list[str]:
     rows = ["workload,n_ops,opara_ms,nimble_ms,ratio,schedule_ms,plan_cache_hit_ms"]
     graphs = {name: fn(1) for name, fn in PAPER_WORKLOADS.items()}
     graphs["kimi-k2 (4L)"] = arch_workload("kimi-k2-1t-a32b")
+    graphs["kimi-moe-ragged (4L)"] = moe_ragged_workload()
     graphs["hymba (4L)"] = arch_workload("hymba-1.5b")
     for name, g in graphs.items():
         t_opara = _time_ms(allocate_streams, g)

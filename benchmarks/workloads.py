@@ -307,7 +307,8 @@ def attach_payloads(g: OpGraph, d: int = 32, tokens: int = 4,
     return g
 
 
-def arch_workload(arch: str, batch: int = 1, seq: int = 32, n_layers: int = 4):
+def arch_workload(arch: str, batch: int = 1, seq: int = 32, n_layers: int = 4,
+                  moe_dispatch: str = "auto"):
     """Assigned-architecture operator graphs in the small-op regime the
     paper targets (batch 1–16, short sequences — BERT in the paper runs
     seq=32; LLM decode microbatches look the same).  At prefill scale
@@ -317,4 +318,16 @@ def arch_workload(arch: str, batch: int = 1, seq: int = 32, n_layers: int = 4):
     from repro.configs import get_config
     from repro.models.opgraph_export import build_lm_opgraph
     cfg = get_config(arch)
-    return build_lm_opgraph(cfg, batch=batch, seq=seq, n_layers=n_layers)
+    return build_lm_opgraph(cfg, batch=batch, seq=seq, n_layers=n_layers,
+                            moe_dispatch=moe_dispatch)
+
+
+def moe_ragged_workload(batch: int = 1, seq: int = 32, n_layers: int = 4):
+    """Routed-MoE topology at bench scale: router → per-expert ragged
+    gathers (unequal static capacities) → two grouped-GEMM waves → combine.
+    This is the graph shape the grouped ragged-M kernel executes; keeping it
+    in the bench set gates the scheduler/simulator trajectory on the
+    paper's hardest fan-out case (cost-only here — the differential harness
+    owns the executable parity checks)."""
+    return arch_workload("kimi-k2-1t-a32b", batch=batch, seq=seq,
+                         n_layers=n_layers, moe_dispatch="ragged")

@@ -17,6 +17,12 @@ Phase 1, ``_lower`` (capture time, runs once per plan):
     "matmul"`` are routed to the ``branch_gemm`` Pallas kernel (interpret
     mode on CPU, MXU tiles on TPU) with a ``vmap`` fallback for
     non-tileable shapes or oversized interpret-mode grids;
+  * matmul groups whose branches share ``(K, F)`` but differ in row count
+    (the MoE expert fan-out with unequal routed token counts) cannot be
+    ``jnp.stack``-ed — they lower to ONE ``grouped_gemm`` step instead:
+    branch inputs are concatenated with a capture-time offset table and the
+    ragged Pallas kernel walks a tile→group map (ref fallback inside the
+    wrapper keeps it a single fused op on non-tileable shapes);
   * each op gets a slot in a flat list environment and each slot a
     precomputed last-use step, so intermediates are dropped as soon as
     they are dead (list indexing replaces dict hashing in the hot loop).
@@ -27,37 +33,42 @@ grouping decisions, no const re-stacking, no dict lookups.
 Execution semantics are unchanged from the wave model:
   * waves run in order;
   * within a wave, fusion groups of size > 1 execute as ONE stacked op
-    (batched GEMM / vmapped payload) — the horizontal-fusion realization of
-    streams;
+    (batched GEMM / vmapped payload / ragged grouped GEMM) — the
+    horizontal-fusion realization of streams;
   * singleton groups run as-is; XLA still sees them inside one program and
     can interleave their DMA with neighbouring waves' compute.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import INTERPRET_GRID_LIMIT as _INTERPRET_GRID_LIMIT
 from .fusion import WaveSchedule
 from .graph import OpGraph
 
 # Routing targets for a lowered step.
-_CALL = "call"                # single payload call
-_VMAP = "vmap"                # stacked group via vmapped payload
-_BRANCH_GEMM = "branch_gemm"  # stacked group via the Pallas fused GEMM
+_CALL = "call"                  # single payload call
+_VMAP = "vmap"                  # stacked group via vmapped payload
+_BRANCH_GEMM = "branch_gemm"    # stacked group via the Pallas fused GEMM
+_GROUPED_GEMM = "grouped_gemm"  # ragged-M group via the grouped Pallas GEMM
 
-# In interpret mode (CPU) the Pallas grid is unrolled at trace time; beyond
-# this many grid points the vmap fallback compiles and runs faster.
-_INTERPRET_GRID_LIMIT = 64
+# _INTERPRET_GRID_LIMIT (imported above): in interpret mode (CPU) a Pallas
+# grid is unrolled at trace time; beyond that many grid points the vmap
+# fallback compiles and runs faster.  ONE constant shared with the kernel
+# wrappers so their internal ref fallbacks agree with the route decision.
 
 
 @dataclasses.dataclass
 class Step:
     """One pre-lowered execution step (all decisions made at capture time)."""
 
-    route: str                          # _CALL | _VMAP | _BRANCH_GEMM
+    route: str                          # _CALL | _VMAP | _BRANCH_GEMM |
+                                        # _GROUPED_GEMM
     fn: Callable[..., Any] | None       # payload (vmapped for _VMAP)
     arg_slots: tuple                    # _CALL: (slot, ...) positional args
                                         # stacked: per-arg tuple of branch slots
@@ -66,6 +77,8 @@ class Step:
     out_slots: tuple[int, ...]          # one slot per branch (singles: one)
     free_slots: tuple[int, ...]         # slots dead after this step
     op_ids: tuple[int, ...]             # provenance (tests / debugging)
+    group_sizes: tuple[int, ...] = ()   # _GROUPED_GEMM: per-branch row counts
+                                        # (the capture-time offset table)
 
 
 @dataclasses.dataclass
@@ -79,6 +92,14 @@ class CapturedGraph:
     fn: Callable[..., Any]           # python callable (uncompiled)
     jitted: Callable[..., Any]       # jit'd single-program executable
     steps: list[Step] = dataclasses.field(default_factory=list)
+    # input names in input_ids order, precomputed at capture time so the
+    # replay path does no per-call graph walks
+    input_names: tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.input_names:
+            self.input_names = tuple(
+                self.graph.nodes[i].name for i in self.input_ids)
 
     def __call__(self, inputs: Mapping[str, Any]) -> list[Any]:
         args = self._bind(inputs)
@@ -90,11 +111,18 @@ class CapturedGraph:
 
     def _bind(self, inputs: Mapping[str, Any]) -> list[Any]:
         args = []
-        for i in self.input_ids:
-            name = self.graph.nodes[i].name
+        for name in self.input_names:
             if name not in inputs:
                 raise KeyError(f"missing input {name!r}")
             args.append(inputs[name])
+        if len(inputs) != len(self.input_names):
+            # a typo'd name would otherwise pass silently whenever the real
+            # input happens to be bound too — fail loudly instead
+            unknown = sorted(set(inputs) - set(self.input_names))
+            if unknown:
+                raise KeyError(
+                    f"unrecognized input name(s) {unknown}; expected "
+                    f"{sorted(self.input_names)}")
         return args
 
     def program_stats(self) -> dict[str, float]:
@@ -104,18 +132,24 @@ class CapturedGraph:
             "n_single": float(routes.count(_CALL)),
             "n_vmap": float(routes.count(_VMAP)),
             "n_branch_gemm": float(routes.count(_BRANCH_GEMM)),
+            "n_grouped_gemm": float(routes.count(_GROUPED_GEMM)),
         }
 
 
-def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
-    """A group is stackable if all ops share fuse_sig, fn arity and
-    per-branch constant shapes.
+def _branch_input_shapes(
+    graph: OpGraph, group: Sequence[int], arg: int = 0,
+) -> list[tuple[int, ...] | None]:
+    """Declared ``out_shape`` of each branch's ``arg``-th input producer
+    (``None`` where the builder did not declare one)."""
+    return [graph.nodes[graph.nodes[g].inputs[arg]].out_shape for g in group]
 
-    Contract: branch-varying parameters (weights) must be declared in
-    ``meta["consts"]`` — the capturer stacks them alongside the inputs and
-    executes ONE fused payload.  Ops whose closures hide differing state
-    must leave ``fuse_sig=None``.
-    """
+
+def _uniform_group(graph: OpGraph, group: Sequence[int]) -> bool:
+    """Shared eligibility core for BOTH fused routes (stacked and grouped):
+    every op has a payload, the same fuse_sig and arity, and per-branch
+    constants of identical shapes AND dtypes (``jnp.stack`` over mixed
+    dtypes would silently promote, so the fused group would return a
+    different dtype than unfused execution)."""
     if len(group) < 2:
         return False
     first = graph.nodes[group[0]]
@@ -133,6 +167,40 @@ def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
         if len(cg) != len(c0):
             return False
         if any(jnp.shape(a) != jnp.shape(b) for a, b in zip(cg, c0)):
+            return False
+        if any(jnp.result_type(a) != jnp.result_type(b)
+               for a, b in zip(cg, c0)):
+            return False
+    return True
+
+
+def _stack_consts(graph: OpGraph, group: Sequence[int]) -> tuple:
+    """Const hoisting: per-branch constants stacked ONCE at capture time,
+    outside the trace — jax.jit sees ready-made device constants."""
+    nodes = [graph.nodes[o] for o in group]
+    n_consts = len(nodes[0].meta.get("consts", ()))
+    return tuple(
+        jnp.stack([jnp.asarray(n.meta["consts"][c]) for n in nodes])
+        for c in range(n_consts))
+
+
+def _can_stack(graph: OpGraph, group: Sequence[int]) -> bool:
+    """A group is stackable if it is uniform (:func:`_uniform_group`) and
+    no two branches *declare* different input shapes (``jnp.stack`` at run
+    time needs equal shapes; ragged matmul groups take the grouped route
+    instead).
+
+    Contract: branch-varying parameters (weights) must be declared in
+    ``meta["consts"]`` — the capturer stacks them alongside the inputs and
+    executes ONE fused payload.  Ops whose closures hide differing state
+    must leave ``fuse_sig=None``.
+    """
+    if not _uniform_group(graph, group):
+        return False
+    for a in range(len(graph.nodes[group[0]].inputs)):
+        known = {s for s in _branch_input_shapes(graph, group, a)
+                 if s is not None}
+        if len(known) > 1:
             return False
     return True
 
@@ -158,22 +226,70 @@ def _gemm_routable(graph: OpGraph, group: Sequence[int]) -> bool:
     return True
 
 
-def _pick_gemm_route(w: jax.Array, n_branches: int, gemm_kernel: str) -> str:
-    """Decide Pallas vs vmap for an eligible GEMM group (capture time)."""
+def _ragged_group_sizes(
+    graph: OpGraph, group: Sequence[int],
+) -> tuple[int, ...] | None:
+    """Per-branch row counts for the grouped ragged-M GEMM route, or
+    ``None`` when the group does not qualify.
+
+    Qualifying groups are matmul-marked (``_gemm_routable``) with uniform
+    const shapes/dtypes, whose branch inputs all *declare* 2-D
+    ``[M_i, K]`` shapes sharing K but differing in at least one M — the
+    unequal-token MoE expert fan-out.  Equal-M groups stay on the stacked
+    path (``_can_stack``), which is strictly cheaper.
+    """
+    if not (_gemm_routable(graph, group) and _uniform_group(graph, group)):
+        return None
+    shapes = _branch_input_shapes(graph, group)
+    if any(s is None or len(s) != 2 for s in shapes):
+        return None
+    k = jnp.shape(graph.nodes[group[0]].meta["consts"][0])[0]
+    if any(s[1] != k for s in shapes):
+        return None
+    sizes = tuple(int(s[0]) for s in shapes)
+    if len(set(sizes)) < 2:
+        return None   # uniform M: the stacked path handles it
+    # mixed input dtypes would promote under jnp.concatenate
+    dtypes = {graph.nodes[graph.nodes[g].inputs[0]].out_dtype
+              for g in group}
+    dtypes.discard(None)
+    if len(dtypes) > 1:
+        return None
+    return sizes
+
+
+def _pick_gemm_route(w: jax.Array, n_branches: int, gemm_kernel: str,
+                     m: int | None = None) -> str:
+    """Decide Pallas vs vmap for an eligible GEMM group (capture time).
+
+    The interpret-mode grid estimate runs the SAME tile selection as the
+    ``branch_gemm`` wrapper (``select_tiles``), so the decision counts the
+    grid the kernel would actually launch — including the M dimension when
+    the branch input shape is declared.  ``m=None`` (undeclared shape)
+    counts a single row tile, matching the legacy M-blind estimate — an
+    optimistic floor, so builders that want the exact decision should
+    declare ``out_shape`` on branch inputs.  Non-tileable shapes go to the
+    kernel wrapper's einsum-ref fallback, which is one fused op with no
+    unrolled grid.
+    """
     if gemm_kernel == "vmap":
         return _VMAP
     if gemm_kernel == "pallas":
         return _BRANCH_GEMM
     # "auto": on TPU always take the fused kernel; on CPU (interpret mode)
-    # only when the unrolled grid stays small — the public branch_gemm
-    # wrapper additionally falls back to the einsum reference for
-    # non-tileable shapes, which is still one fused op.
+    # only when the unrolled grid stays small.
     from ..kernels import interpret_mode
+    from ..kernels.branch_gemm.ops import select_tiles
 
     if not interpret_mode():
         return _BRANCH_GEMM
     k, f = w.shape
-    grid_points = n_branches * max(k // 512, 1) * max(f // 128, 1)
+    tiles = select_tiles(m if m is not None else 8, k, f)
+    if tiles is None:
+        return _BRANCH_GEMM   # einsum-ref fallback: fused, no grid
+    bm, bf, bk = tiles
+    m_tiles = (m // bm) if m is not None else 1
+    grid_points = n_branches * m_tiles * (f // bf) * (k // bk)
     return _BRANCH_GEMM if grid_points <= _INTERPRET_GRID_LIMIT else _VMAP
 
 
@@ -197,6 +313,32 @@ def _branch_gemm_step() -> Callable[..., Any]:
             b = rest[0]
             out = out + b.reshape((n,) + (1,) * len(batch_shape) + (f,))
         return out
+
+    return fused
+
+
+def _grouped_gemm_step(group_sizes: tuple[int, ...]) -> Callable[..., Any]:
+    """Build the ragged fused-GEMM callable for one grouped step.
+
+    The executor calls it ``fn([x_0, ..., x_{N-1}], *step.consts)`` with
+    the per-branch 2-D inputs UNstacked (their row counts differ); the fn
+    hands the parts straight to the grouped kernel wrapper — which pads
+    each to the row tile and concatenates ONCE — and gets one output per
+    branch back.  ``group_sizes`` is the capture-time offset table the
+    trace-time shapes must honor.
+    """
+    def fused(xs: Sequence[jax.Array], w: jax.Array,
+              *rest: jax.Array) -> list[jax.Array]:
+        from ..kernels.grouped_gemm.ops import grouped_gemm_parts
+
+        for x, m in zip(xs, group_sizes):
+            assert x.shape[0] == m, (
+                f"branch rows {x.shape[0]} != captured size {m}")
+        outs = grouped_gemm_parts(list(xs), w)
+        if rest:  # per-branch bias [N, F]
+            b = rest[0]
+            outs = [o + b[i] for i, o in enumerate(outs)]
+        return outs
 
     return fused
 
@@ -245,16 +387,18 @@ def _lower(
                     tuple(slot_of[n.inputs[a]] for n in nodes)
                     for a in range(arity)
                 )
-                n_consts = len(nodes[0].meta.get("consts", ()))
-                # const hoisting: stacked ONCE here, outside the trace —
-                # jax.jit sees ready-made device constants, never re-stacks.
-                consts = tuple(
-                    jnp.stack([jnp.asarray(n.meta["consts"][c]) for n in nodes])
-                    for c in range(n_consts)
-                )
+                consts = _stack_consts(graph, group)
                 if _gemm_routable(graph, group):
+                    # _can_stack guarantees all declared shapes agree — use
+                    # the first declared one (any branch may omit it)
+                    shape = next((s for s in
+                                  _branch_input_shapes(graph, group)
+                                  if s is not None), None)
+                    m = (int(math.prod(shape[:-1]))
+                         if shape is not None else None)
                     route = _pick_gemm_route(
-                        nodes[0].meta["consts"][0], len(group), gemm_kernel)
+                        nodes[0].meta["consts"][0], len(group), gemm_kernel,
+                        m=m)
                 else:
                     route = _VMAP
                 fn = (_branch_gemm_step() if route == _BRANCH_GEMM
@@ -263,6 +407,20 @@ def _lower(
                     route=route, fn=fn, arg_slots=arg_slots, consts=consts,
                     out_slots=tuple(slot_of[o] for o in group),
                     free_slots=(), op_ids=tuple(group)))
+            elif (gemm_kernel != "vmap"
+                  and (ragged := _ragged_group_sizes(graph, group))
+                  is not None):
+                # ragged-M matmul group: ONE grouped kernel instead of N
+                # serialized branches (jnp.stack is impossible here)
+                nodes = [graph.nodes[o] for o in group]
+                consts = _stack_consts(graph, group)
+                steps.append(Step(
+                    route=_GROUPED_GEMM, fn=_grouped_gemm_step(ragged),
+                    arg_slots=(tuple(slot_of[n.inputs[0]] for n in nodes),),
+                    consts=consts,
+                    out_slots=tuple(slot_of[o] for o in group),
+                    free_slots=(), op_ids=tuple(group),
+                    group_sizes=ragged))
             else:
                 for op in group:
                     node = graph.nodes[op]
@@ -276,7 +434,8 @@ def _lower(
                         op_ids=(op,)))
 
     # dead-slot analysis: a slot is freed right after its last consuming
-    # step, unless it backs an output.
+    # step — or, for outputs nothing ever consumes (and which aren't program
+    # outputs), right after its producing step — unless it backs an output.
     keep = {slot_of[o] for o in output_ids}
     last_use: dict[int, int] = {}
     for k, step in enumerate(steps):
@@ -289,8 +448,11 @@ def _lower(
         if s not in keep:
             free_at.setdefault(last, []).append(s)
     for k, step in enumerate(steps):
-        step.free_slots = tuple(
-            s for s in free_at.get(k, ()) if s not in step.out_slots)
+        dead = [s for s in free_at.get(k, ()) if s not in step.out_slots]
+        # unconsumed non-output results die the moment they are produced
+        dead += [s for s in step.out_slots
+                 if s not in keep and s not in last_use]
+        step.free_slots = tuple(dead)
     return steps, slot_of, n_slots
 
 
@@ -306,7 +468,10 @@ def capture(
     ``gemm_kernel`` routes eligible stacked GEMM groups: ``"auto"`` (Pallas
     on TPU / small interpret grids, vmap otherwise), ``"pallas"`` (always
     the fused kernel, einsum-ref fallback for non-tileable shapes) or
-    ``"vmap"`` (always the generic stacked payload).
+    ``"vmap"`` (always the generic stacked payload).  Ragged-M matmul
+    groups take the grouped kernel under ``"auto"``/``"pallas"`` and fall
+    back to per-branch calls under ``"vmap"`` (a ragged group cannot be
+    vmapped).
     """
     if gemm_kernel not in ("auto", "pallas", "vmap"):
         raise ValueError(f"unknown gemm_kernel {gemm_kernel!r}")
@@ -330,6 +495,11 @@ def capture(
             if step.route == _CALL:
                 out = step.fn(*[env[s] for s in step.arg_slots], *step.consts)
                 env[step.out_slots[0]] = out
+            elif step.route == _GROUPED_GEMM:
+                outs = step.fn([env[s] for s in step.arg_slots[0]],
+                               *step.consts)
+                for k, slot in enumerate(step.out_slots):
+                    env[slot] = outs[k]
             else:
                 stacked = [jnp.stack([env[s] for s in slots])
                            for slots in step.arg_slots]
@@ -354,9 +524,18 @@ def capture(
     )
 
 
-def run_sequential_uncompiled(graph: OpGraph, inputs: Mapping[str, Any]) -> list[Any]:
+def run_sequential_uncompiled(
+    graph: OpGraph,
+    inputs: Mapping[str, Any],
+    output_ids: Sequence[int] | None = None,
+) -> list[Any]:
     """Eager per-op execution in topo order — the "stock PyTorch" baseline:
     every op is dispatched separately from Python (launch overhead included).
+
+    ``output_ids`` selects which ops' results are returned (default: the
+    graph's leaves) — pass a :class:`CapturedGraph`'s ``output_ids`` so a
+    differential comparison reads the SAME outputs the compiled program
+    returns instead of silently re-deriving them.
     """
     env: dict[int, Any] = {}
     for i in graph.topological_order():
@@ -367,4 +546,6 @@ def run_sequential_uncompiled(graph: OpGraph, inputs: Mapping[str, Any]) -> list
             consts = node.meta.get("consts", ())
             env[i] = jax.block_until_ready(
                 node.fn(*[env[p] for p in node.inputs], *consts))
-    return [env[o] for o in graph.leaves()]
+    if output_ids is None:
+        output_ids = graph.leaves()
+    return [env[o] for o in output_ids]

@@ -9,6 +9,8 @@ Each kernel lives in its own subpackage with the mandated layout:
 Kernels:
     branch_gemm       horizontally-fused multi-branch GEMM — the Opara wave
                       (N independent small GEMMs → one MXU-saturating kernel)
+    grouped_gemm      ragged-M grouped GEMM (unequal branch row counts, MoE
+                      expert fan-out) — scalar-prefetched tile→group table
     flash_attention   causal/windowed GQA flash attention (prefill/train)
     decode_attention  split-KV flash-decoding for single-token decode
     rwkv6             chunked WKV6 recurrence (memory-bound scan)
@@ -18,6 +20,13 @@ Kernels:
 All kernels validate on CPU via ``interpret=True`` and are written for
 TPU VMEM tiling (128-aligned MXU tiles, fp32 accumulation).
 """
+
+
+# In interpret mode (CPU) a Pallas grid is unrolled at trace time; beyond
+# this many grid points a non-Pallas fallback (vmap / einsum ref) compiles
+# and runs faster.  Shared by the capturer's route decision and the kernel
+# wrappers' internal fallbacks so the two can never drift.
+INTERPRET_GRID_LIMIT = 64
 
 
 def interpret_mode() -> bool:

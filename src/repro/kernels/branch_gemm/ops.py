@@ -9,8 +9,23 @@ from .kernel import branch_gemm_pallas
 from .ref import branch_gemm_ref
 
 
-def _tileable(m: int, k: int, f: int) -> bool:
-    return m % 8 == 0 and k % 128 == 0 and f % 128 == 0
+def select_tiles(m: int, k: int, f: int, bm: int = 128, bf: int = 128,
+                 bk: int = 512) -> tuple[int, int, int] | None:
+    """The ONE tile-selection rule for the fused branch GEMM: ``None`` when
+    ``(m, k, f)`` is not tileable (the wrapper then runs the einsum ref),
+    otherwise the exact ``(bm, bf, bk)`` the kernel will launch with.
+    Shared with the capturer's route estimate so the Pallas-vs-vmap
+    decision counts the same grid the kernel actually runs."""
+    if m % 8 or k % 128 or f % 128:
+        return None
+    bm, bf, bk = min(bm, m), min(bf, f), min(bk, k)
+    while m % bm:
+        bm //= 2
+    while f % bf:
+        bf //= 2
+    while k % bk:
+        bk //= 2
+    return bm, bf, bk
 
 
 def branch_gemm(x: jax.Array, w: jax.Array, bm: int = 128, bf: int = 128,
@@ -18,16 +33,9 @@ def branch_gemm(x: jax.Array, w: jax.Array, bm: int = 128, bf: int = 128,
     """Fused N-branch GEMM: [N,M,K] @ [N,K,F] → [N,M,F]."""
     n, m, k = x.shape
     f = w.shape[-1]
-    if not _tileable(m, k, f):
+    tiles = select_tiles(m, k, f, bm, bf, bk)
+    if tiles is None:
         return branch_gemm_ref(x, w)
-    bm = min(bm, m)
-    bf = min(bf, f)
-    bk = min(bk, k)
-    while m % bm:
-        bm //= 2
-    while f % bf:
-        bf //= 2
-    while k % bk:
-        bk //= 2
+    bm, bf, bk = tiles
     return branch_gemm_pallas(x, w, bm=bm, bf=bf, bk=bk,
                               interpret=interpret_mode())

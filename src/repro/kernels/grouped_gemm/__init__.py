@@ -1,0 +1,3 @@
+from .ops import grouped_gemm
+
+__all__ = ["grouped_gemm"]

@@ -1,0 +1,87 @@
+"""Grouped ragged-M GEMM — unequal parallel branches as ONE kernel.
+
+The hardest Opara wave is the MoE expert fan-out where the parallel
+branches have *unequal* token counts: ``branch_gemm`` requires one common
+M, so ragged groups used to serialize (or be faked with uniform payloads).
+Here the branches' rows are concatenated into one ``[sum_M, K]`` operand —
+each group's segment zero-padded up to a multiple of the row tile ``bm`` —
+and the grid walks row tiles: every tile knows its group via a prefetched
+``tile_group`` table (``PrefetchScalarGridSpec``), so the weight DMA for
+group ``g`` streams in while tile ``t-1``'s matmul runs.  One launch, MXU
+tiles stay 128-aligned, zero per-branch dispatch — the IOS/Nimble uneven-
+branch case executed the way the equal-shape wave already is.
+
+    x: [sum_Mp, K]   w: [N, K, F]   tile_group: [T]   out: [sum_Mp, F]
+
+Grid: (T, F/bf, K/bk) — K innermost so the fp32 VMEM accumulator carries
+across K tiles of one (row-tile, f) block.  ``tile_group`` maps row tile →
+group index; a zero-row group simply contributes no tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tg_ref, x_ref, w_ref, o_ref, acc_ref):
+    del tg_ref  # consumed by the index maps
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_group", "bm", "bf", "bk",
+                                    "interpret"))
+def grouped_gemm_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    tile_group: tuple[int, ...],
+    bm: int = 128,
+    bf: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x`` must already be padded: row tile ``t`` (rows ``[t*bm, (t+1)*bm)``)
+    belongs entirely to group ``tile_group[t]``."""
+    mp, k = x.shape
+    n, k2, f = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    t = len(tile_group)
+    assert mp == t * bm, f"padded rows {mp} != {t} tiles x bm={bm}"
+    assert f % bf == 0 and k % bk == 0, (
+        f"dims ({k},{f}) must tile by ({bk},{bf})")
+    assert all(0 <= g < n for g in tile_group), "tile_group out of range"
+    tg = jnp.asarray(tile_group, jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t, f // bf, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, tg: (i, kk)),
+            pl.BlockSpec((1, bk, bf), lambda i, j, kk, tg: (tg[i], kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, kk, tg: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bf), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, f), x.dtype),
+        interpret=interpret,
+    )(tg, x, w)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped ragged-M GEMM."""
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(x, w, group_sizes):
+    """x: [sum_M, K] rows concatenated per group; w: [N, K, F];
+    ``group_sizes``: N static ints summing to sum_M → [sum_M, F] with fp32
+    accumulation.  Zero-row groups contribute an empty segment."""
+    f = w.shape[-1]
+    outs, off = [], 0
+    for i, m in enumerate(group_sizes):
+        outs.append(jnp.einsum("mk,kf->mf", x[off:off + m], w[i],
+                               preferred_element_type=jnp.float32))
+        off += m
+    if not outs:
+        return jnp.zeros((0, f), x.dtype)
+    return jnp.concatenate(outs, axis=0).astype(x.dtype)

@@ -42,13 +42,24 @@ def _w(params, *path):
 
 def build_lm_opgraph(cfg: ModelConfig, batch: int, seq: int,
                      params: Any = None, n_layers: int | None = None,
-                     moe_branch_cap: int = 16) -> OpGraph:
+                     moe_branch_cap: int = 16,
+                     moe_dispatch: str = "auto") -> OpGraph:
     """Operator DAG of an LM forward pass (prefill semantics).
 
     ``n_layers`` trims depth (graph-size control for schedulers/benchmarks);
-    MoE fan-out is capped at ``moe_branch_cap`` expert branches per layer
-    (each branch node carries 1/cap of the routed FLOPs).
+    MoE fan-out is capped at ``moe_branch_cap`` expert branches per layer.
+
+    ``moe_dispatch`` picks the MoE block structure: ``"uniform"`` emits the
+    historical cost-only fan-out (equal-FLOP expert branches, scatter
+    dispatch/combine without payloads); ``"ragged"`` emits the routed
+    fan-out — real router → per-expert token gathers with *unequal* static
+    capacities → grouped ragged-M expert GEMMs → weighted scatter-add
+    combine — executable end to end whenever ``params`` is threaded.
+    ``"auto"`` (default) uses ragged with params and uniform without, so
+    cost-only scheduling benchmarks keep their historical topology.
     """
+    if moe_dispatch not in ("auto", "ragged", "uniform"):
+        raise ValueError(f"unknown moe_dispatch {moe_dispatch!r}")
     g = OpGraph(cfg.name)
     d, dt = cfg.d_model, 2
     b, s = batch, seq
@@ -77,7 +88,8 @@ def build_lm_opgraph(cfg: ModelConfig, batch: int, seq: int,
                                   windows[li] or s)
             elif kind in ("moe",):
                 x = _dense_layer(g, cfg, x, b, s, tag, pl, moe=True,
-                                 moe_branch_cap=moe_branch_cap)
+                                 moe_branch_cap=moe_branch_cap,
+                                 moe_dispatch=moe_dispatch)
             else:
                 x = _dense_layer(g, cfg, x, b, s, tag, pl, moe=False)
             layer_idx += 1
@@ -112,7 +124,7 @@ def _matmul_bias(h, w, bias):
 
 
 def _gemm_node(g, name, inp, pl_linear, m, k, n, bias: bool = False,
-               cost=None, fuse_sig=None):
+               cost=None, fuse_sig=None, out_shape=None):
     """GEMM node following the capture contract: weights go in
     meta["consts"] so same-signature branches stack into one fused kernel.
 
@@ -127,7 +139,8 @@ def _gemm_node(g, name, inp, pl_linear, m, k, n, bias: bool = False,
     cost = cost if cost is not None else gemm_cost(m, k, n)
     fuse_sig = fuse_sig if fuse_sig is not None else ("gemm", k, n, bias)
     if pl_linear is None:
-        return g.add(name, OpKind.GEMM, [inp], cost=cost, fuse_sig=fuse_sig)
+        return g.add(name, OpKind.GEMM, [inp], cost=cost, fuse_sig=fuse_sig,
+                     out_shape=out_shape)
     if isinstance(pl_linear, dict):
         consts = (pl_linear["w"],) + ((pl_linear["b"],) if bias else ())
     else:  # a bare weight array (expert slices) — carries no bias term
@@ -136,24 +149,42 @@ def _gemm_node(g, name, inp, pl_linear, m, k, n, bias: bool = False,
     return g.add(name, OpKind.GEMM, [inp],
                  fn=_matmul_bias if bias else _matmul,
                  cost=cost, fuse_sig=fuse_sig, consts=consts,
-                 payload="matmul")
+                 out_shape=out_shape, payload="matmul")
 
 
-def _dense_layer(g, cfg, x, b, s, tag, pl, moe: bool, moe_branch_cap: int = 16):
+def _dense_layer(g, cfg, x, b, s, tag, pl, moe: bool, moe_branch_cap: int = 16,
+                 moe_dispatch: str = "auto"):
     d, hd, nh, kvh = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     bias = cfg.qkv_bias
     n1 = g.add(f"{tag}.norm1", OpKind.NORM, [x],
                fn=(lambda h: _rms(pl["norm1"], h)) if pl else None,
                cost=norm_cost(b * s * d))
-    # QKV: 3 parallel GEMM branches (the canonical Opara wave)
     attn_p = pl["attn"] if pl else None
-    q = _gemm_node(g, f"{tag}.wq", n1, attn_p and attn_p["wq"], b * s, d, nh * hd, bias)
-    k = _gemm_node(g, f"{tag}.wk", n1, attn_p and attn_p["wk"], b * s, d, kvh * hd, bias)
-    v = _gemm_node(g, f"{tag}.wv", n1, attn_p and attn_p["wv"], b * s, d, kvh * hd, bias)
-    att = g.add(f"{tag}.attn", OpKind.ATTENTION, [q, k, v],
-                fn=(lambda qq, kk, vv: _attn_payload(cfg, qq, kk, vv)) if pl else None,
-                cost=attention_cost(b, s, s, nh, hd, kvh))
-    o = _gemm_node(g, f"{tag}.wo", att, attn_p and attn_p["wo"], b * s, nh * hd, d, False)
+    if pl is not None and cfg.mla is not None:
+        # MLA params carry low-rank factors (wq_a/wq_b/wkv_a/...), not the
+        # separate wq/wk/wv the branch structure below expects — run the
+        # whole latent attention (wo included) as one payload node.  The
+        # node's cost must carry the folded-in projection GEMMs too, or the
+        # layer's dominant FLOPs vanish from the scheduler's view.
+        m = cfg.mla
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        o = g.add(f"{tag}.attn", OpKind.ATTENTION, [n1],
+                  fn=lambda h: _mla_payload(cfg, attn_p, h),
+                  cost=_sum_costs(
+                      attention_cost(b, s, s, nh, hd, kvh),
+                      gemm_cost(b * s, d, m.q_lora_rank),
+                      gemm_cost(b * s, m.q_lora_rank, nh * qk_head),
+                      gemm_cost(b * s, d, m.kv_lora_rank + m.qk_rope_head_dim),
+                      gemm_cost(b * s, nh * m.v_head_dim, d)))
+    else:
+        # QKV: 3 parallel GEMM branches (the canonical Opara wave)
+        q = _gemm_node(g, f"{tag}.wq", n1, attn_p and attn_p["wq"], b * s, d, nh * hd, bias)
+        k = _gemm_node(g, f"{tag}.wk", n1, attn_p and attn_p["wk"], b * s, d, kvh * hd, bias)
+        v = _gemm_node(g, f"{tag}.wv", n1, attn_p and attn_p["wv"], b * s, d, kvh * hd, bias)
+        att = g.add(f"{tag}.attn", OpKind.ATTENTION, [q, k, v],
+                    fn=(lambda qq, kk, vv: _attn_payload(cfg, qq, kk, vv)) if pl else None,
+                    cost=attention_cost(b, s, s, nh, hd, kvh))
+        o = _gemm_node(g, f"{tag}.wo", att, attn_p and attn_p["wo"], b * s, nh * hd, d, False)
     r1 = g.add(f"{tag}.res1", OpKind.ELEMENTWISE, [x, o],
                fn=(lambda a, c: a + c) if pl else None,
                cost=elementwise_cost(b * s * d, n_in=2))
@@ -172,6 +203,9 @@ def _dense_layer(g, cfg, x, b, s, tag, pl, moe: bool, moe_branch_cap: int = 16):
                      cost=elementwise_cost(b * s * dff, n_in=2, flops_per_elem=5))
         down = _gemm_node(g, f"{tag}.down", prod, ffn_p and ffn_p["down"],
                           b * s, dff, d, False)
+    elif moe_dispatch == "ragged" or (moe_dispatch == "auto" and pl is not None):
+        down = _moe_ragged_block(g, cfg, n2, b, s, tag,
+                                 pl["ffn"] if pl else None, moe_branch_cap)
     else:
         e = cfg.moe
         moe_p = pl["ffn"] if pl else None
@@ -225,6 +259,190 @@ def _attn_payload(cfg, q, k, v):
     pos = jnp.arange(s)
     mask = causal_window_mask(pos, pos, None)
     return _sdpa(qh, kh, vh, mask).reshape(b, s, nh * hd)
+
+
+def _mla_payload(cfg, p, h):
+    from .attention import mla_prefill
+    b, s = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    return mla_prefill(p, h, cfg, positions)[0]
+
+
+def _sum_costs(*costs):
+    """Combine analytic costs of ops folded into one node: traffic and
+    FLOPs add; working set and occupancy are bounded by the widest phase."""
+    from ..core.graph import OpCost
+    occ = [c.occupancy for c in costs if c.occupancy is not None]
+    return OpCost(
+        flops=sum(c.flops for c in costs),
+        bytes_read=sum(c.bytes_read for c in costs),
+        bytes_written=sum(c.bytes_written for c in costs),
+        vmem_bytes=max(c.vmem_bytes for c in costs),
+        occupancy=max(occ) if occ else None)
+
+
+# -- routed (ragged) MoE fan-out ---------------------------------------------
+#
+# The dispatch/combine payloads both recompute the routing decision from the
+# router node's logits — pure, deterministic, and cheap next to the expert
+# GEMMs, so the graph needs no multi-output nodes and XLA CSEs the repeated
+# top-k inside the captured single program.
+
+def _moe_capacities(n_tokens: int, e, nb: int, top_k: int) -> tuple[int, ...]:
+    """Static per-expert capacities, deliberately UNEQUAL (0.5×–1.5× the
+    mean routed load) so the exported fan-out is genuinely ragged and
+    exercises the grouped ragged-M kernel; the total stays at roughly
+    ``capacity_factor`` × routed tokens, the moe_gemm capacity-buffer
+    budget."""
+    base = n_tokens * top_k / nb * e.capacity_factor
+    return tuple(max(1, int(round(base * (0.5 + j / max(nb - 1, 1)))))
+                 for j in range(nb))
+
+
+def _topk_routing(logits, nb: int, top_k: int, aux_free: bool):
+    """(combine weights [N, k], expert ids [N, k]) from router logits —
+    the same softmax/sigmoid selection rule as :func:`repro.models.ffn.route`
+    (without the balancing bias, which is zero at init)."""
+    lf = logits.reshape(-1, nb).astype(jnp.float32)
+    scores = jax.nn.sigmoid(lf) if aux_free else jax.nn.softmax(lf, axis=-1)
+    top_w, top_idx = jax.lax.top_k(scores, top_k)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+    return top_w, top_idx
+
+
+def _make_dispatch(j: int, cap: int, nb: int, top_k: int, aux_free: bool):
+    """Per-expert token gather: the ``cap`` rows routed to expert ``j``
+    (capacity-truncated, zero-padded when fewer arrive)."""
+    def dispatch(h, logits):
+        d = h.shape[-1]
+        xf = h.reshape(-1, d)
+        _, top_idx = _topk_routing(logits, nb, top_k, aux_free)
+        expert_flat = top_idx.reshape(-1)                       # [N·k]
+        tok = jnp.repeat(jnp.arange(xf.shape[0], dtype=jnp.int32), top_k)
+        mine = expert_flat == j
+        rank = jnp.cumsum(mine) - mine                          # rank within j
+        take = mine & (rank < cap)
+        slot = jnp.where(take, rank, cap)                       # cap = drop row
+        buf = jnp.zeros((cap + 1, d), xf.dtype).at[slot].add(
+            xf[tok] * take[:, None].astype(xf.dtype))
+        return buf[:cap]
+    return dispatch
+
+
+def _make_glu(dff: int):
+    def glu(h):
+        return jax.nn.silu(h[..., :dff]) * h[..., dff:]
+    return glu
+
+
+def _make_combine(caps: tuple[int, ...], nb: int, top_k: int, aux_free: bool):
+    """Weighted scatter-add of the per-expert outputs back to token order:
+    each (token, k) pair re-derives its expert + within-expert rank exactly
+    as the dispatch nodes did, reads that row of the concatenated expert
+    outputs, and sums ``router_weight × row`` over k (capacity-dropped
+    pairs contribute zero)."""
+    offs = []
+    off = 0
+    for c in caps:
+        offs.append(off)
+        off += c
+
+    def combine(*args):
+        *eouts, h, logits = args
+        d = h.shape[-1]
+        xf = h.reshape(-1, d)
+        n = xf.shape[0]
+        top_w, top_idx = _topk_routing(logits, nb, top_k, aux_free)
+        expert_flat = top_idx.reshape(-1)                       # [N·k]
+        w_flat = top_w.reshape(-1)
+        onehot = expert_flat[:, None] == jnp.arange(nb)[None, :]
+        ranks = jnp.cumsum(onehot, axis=0) - onehot
+        rank = jnp.take_along_axis(
+            ranks, expert_flat[:, None], axis=1)[:, 0]
+        caps_arr = jnp.asarray(caps, jnp.int32)
+        offs_arr = jnp.asarray(offs, jnp.int32)
+        cap_e = caps_arr[expert_flat]
+        take = rank < cap_e
+        row = offs_arr[expert_flat] + jnp.minimum(rank, cap_e - 1)
+        allout = jnp.concatenate(eouts, axis=0)                 # [ΣC, d]
+        rows = allout[row] * (w_flat * take).astype(allout.dtype)[:, None]
+        y = rows.reshape(n, top_k, d).sum(axis=1)
+        return y.reshape(h.shape).astype(h.dtype)
+    return combine
+
+
+def _moe_ragged_block(g, cfg, n2, b, s, tag, moe_p, moe_branch_cap):
+    """Routed expert fan-out with REAL dispatch/combine payloads.
+
+    router → nb parallel per-expert gathers (unequal static capacities) →
+    TWO grouped ragged-M GEMM waves (gate∥up, then down — each stacks into
+    ONE ``grouped_gemm`` kernel at capture because the branches share
+    ``(K, F)`` but differ in M) → weighted scatter-add combine (+ the
+    always-on shared expert).  Fan-out is capped at ``moe_branch_cap``
+    branches; routing is then restricted to the first nb experts, so the
+    exported math stays self-consistent (the differential oracle runs the
+    same payloads per-op).
+    """
+    e = cfg.moe
+    d, de = cfg.d_model, e.d_expert
+    nb = min(e.n_experts, moe_branch_cap)
+    top_k = min(e.top_k, nb)
+    caps = _moe_capacities(b * s, e, nb, top_k)
+    rw = (jnp.asarray(moe_p["router"]["w"], jnp.float32)[:, :nb]
+          if moe_p is not None else None)
+    router = g.add(
+        f"{tag}.router", OpKind.REDUCE, [n2],
+        fn=(lambda h: jnp.einsum("...d,de->...e", h.astype(jnp.float32), rw))
+        if moe_p is not None else None,
+        cost=gemm_cost(b * s, d, e.n_experts),
+        out_shape=(b, s, nb), out_dtype=jnp.float32)
+    outs = []
+    for j in range(nb):
+        disp = g.add(
+            f"{tag}.dispatch{j}", OpKind.GATHER, [n2, router],
+            fn=(_make_dispatch(j, caps[j], nb, top_k, e.router_aux_free)
+                if moe_p is not None else None),
+            cost=gather_cost(caps[j], d), out_shape=(caps[j], d))
+        ew = (jnp.concatenate([moe_p["experts"]["gate"][j],
+                               moe_p["experts"]["up"][j]], axis=1)
+              if moe_p is not None else None)
+        h = _gemm_node(g, f"{tag}.expert{j}_in", disp, ew,
+                       caps[j], d, 2 * de,
+                       fuse_sig=("egemm_in", d, 2 * de),
+                       out_shape=(caps[j], 2 * de))
+        glu = g.add(f"{tag}.expert{j}_glu", OpKind.ELEMENTWISE, [h],
+                    fn=_make_glu(de) if moe_p is not None else None,
+                    cost=elementwise_cost(caps[j] * de, n_in=1,
+                                          flops_per_elem=5),
+                    out_shape=(caps[j], de))
+        outs.append(_gemm_node(
+            g, f"{tag}.expert{j}_down", glu,
+            moe_p["experts"]["down"][j] if moe_p is not None else None,
+            caps[j], de, d, fuse_sig=("egemm_down", de, d),
+            out_shape=(caps[j], d)))
+    comb = g.add(
+        f"{tag}.combine", OpKind.SCATTER, outs + [n2, router],
+        fn=(_make_combine(caps, nb, top_k, e.router_aux_free)
+            if moe_p is not None else None),
+        cost=gather_cost(b * s * e.top_k, d))
+    if not e.n_shared:
+        return comb
+    dsh = de * e.n_shared
+    sp = (moe_p["shared"]
+          if moe_p is not None and "shared" in moe_p else None)
+    sw = (jnp.concatenate([sp["gate"]["w"], sp["up"]["w"]], axis=1)
+          if sp is not None else None)
+    sh = _gemm_node(g, f"{tag}.shared_in", n2, sw, b * s, d, 2 * dsh,
+                    fuse_sig=("sgemm_in", d, 2 * dsh))
+    shg = g.add(f"{tag}.shared_glu", OpKind.ELEMENTWISE, [sh],
+                fn=_make_glu(dsh) if sp is not None else None,
+                cost=elementwise_cost(b * s * dsh, n_in=1, flops_per_elem=5))
+    shd = _gemm_node(g, f"{tag}.shared_down", shg,
+                     sp["down"]["w"] if sp is not None else None,
+                     b * s, dsh, d, fuse_sig=("sgemm_down", dsh, d))
+    return g.add(f"{tag}.moe_out", OpKind.ELEMENTWISE, [comb, shd],
+                 fn=(lambda a, c: a + c) if moe_p is not None else None,
+                 cost=elementwise_cost(b * s * d, n_in=2))
 
 
 def _hybrid_layer(g, cfg, x, b, s, tag, pl, window):

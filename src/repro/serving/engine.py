@@ -132,10 +132,10 @@ class InferenceEngine:
         g = build_lm_opgraph(self.cfg, batch=self.max_slots, seq=seq,
                              params=self.params, n_layers=n_layers)
         # measured calibration replays the graph, so every non-input node
-        # needs a payload.  The exporter threads params through dense (and
-        # MoE expert GEMM) layers only — cost-only operators without shapes
-        # (MoE dispatch/combine, hybrid mamba, rwkv scan) cannot be bound as
-        # profiling inputs; fail with a diagnosis instead of a shape error.
+        # needs a payload.  Dense and MoE exports (routed ragged fan-out)
+        # are fully payload-backed; cost-only operators without shapes
+        # (hybrid mamba, rwkv scan) cannot be bound as profiling inputs —
+        # fail with a diagnosis instead of a shape error.
         unbindable = [n.name for n in g
                       if n.fn is None and n.out_shape is None]
         if unbindable:

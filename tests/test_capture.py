@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (
     build_waves,
@@ -64,3 +65,103 @@ def test_wave_independence():
     for node in g:
         for p in node.inputs:
             assert pos[p] < pos[node.op_id], "producer must be in earlier wave"
+
+
+def test_mixed_dtype_consts_do_not_stack():
+    """jnp.stack over mixed-dtype branch weights silently promotes, so a
+    fused group would return different dtypes than unfused execution — the
+    capturer must refuse to stack and run the branches as singles."""
+    from repro.core.graph import OpGraph, OpKind
+    from repro.core.profiler import gemm_cost
+
+    g = OpGraph("mixed")
+    x = g.add("x", OpKind.INPUT, out_shape=(8, 32))
+    rng = np.random.default_rng(0)
+    for i, dt in enumerate((jnp.float32, jnp.float16)):
+        w = jnp.asarray(rng.standard_normal((32, 32)) * 0.1, dt)
+        g.add(f"gemm{i}", OpKind.GEMM, [x], fn=lambda a, w: a @ w,
+              cost=gemm_cost(8, 32, 32, 4), fuse_sig=("gemm", 32, 32),
+              consts=(w,), payload="matmul")
+    exe = compile_plan(schedule(g, "opara", "opara"))
+    stats = exe.program_stats()
+    assert stats["n_vmap"] == stats["n_branch_gemm"] == 0, stats
+    assert stats["n_single"] == 2
+    x_val = jnp.ones((8, 32), jnp.float32)
+    got = exe({"x": x_val})
+    ref = run_sequential_uncompiled(g, {"x": x_val}, output_ids=exe.output_ids)
+    for a, b in zip(got, ref):
+        assert jnp.asarray(a).dtype == jnp.asarray(b).dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_unconsumed_non_output_slot_freed_at_producer():
+    """An op whose result nothing consumes (and which is not a program
+    output) must be freed right after its producing step, not pinned for
+    the whole program."""
+    from repro.core import capture
+    from repro.core.fusion import build_waves
+    from repro.core.graph import OpGraph, OpKind
+    from repro.core.launch_order import ORDER_POLICIES
+    from repro.core.stream_alloc import allocate_streams
+
+    g = OpGraph("dangling")
+    x = g.add("x", OpKind.INPUT, out_shape=(4, 4))
+    dead = g.add("dead", OpKind.ELEMENTWISE, [x], fn=lambda a: a * 2)
+    live = g.add("live", OpKind.ELEMENTWISE, [x], fn=lambda a: a + 1)
+    out = g.add("out", OpKind.ELEMENTWISE, [live], fn=lambda a: a - 1)
+    plan_streams = allocate_streams(g)
+    order = ORDER_POLICIES["topo"](g, None)
+    waves = build_waves(g, plan_streams, order)
+    exe = capture(g, waves, output_ids=[out])
+    slot_of = {op: k for k, op in enumerate(g.nodes)}
+    producing = next(s for s in exe.steps if s.op_ids == (dead,))
+    assert slot_of[dead] in producing.free_slots, (
+        "unconsumed non-output result must die at its producing step")
+    got = exe({"x": jnp.ones((4, 4), jnp.float32)})
+    np.testing.assert_allclose(np.asarray(got[0]),
+                               np.ones((4, 4), np.float32))
+
+
+def test_bind_rejects_unknown_input_names():
+    g = build_inception_like(n_blocks=1, width=2, with_payloads=True)
+    exe = compile_plan(schedule(g, "opara", "opara"))
+    x = jnp.ones((8, 64), jnp.float32)
+    with pytest.raises(KeyError, match="unrecognized"):
+        exe({"x": x, "xx": x})      # typo'd extra name
+    with pytest.raises(KeyError, match="missing"):
+        exe({})
+
+
+def test_run_sequential_honors_output_ids():
+    g = build_inception_like(n_blocks=2, width=2, with_payloads=True)
+    x = jnp.ones((8, 64), jnp.float32)
+    mid = [n.op_id for n in g if n.name == "b0_sum"]
+    full = run_sequential_uncompiled(g, {"x": x})
+    sel = run_sequential_uncompiled(g, {"x": x}, output_ids=mid)
+    assert len(full) == len(g.leaves()) and len(sel) == 1
+    assert sel[0].shape == (8, 64)
+
+
+def test_pick_gemm_route_estimate_matches_kernel_tiles():
+    """The interpret-mode grid estimate must count the grid the branch_gemm
+    wrapper actually launches (shared select_tiles), M included — the old
+    hardcoded k//512 divisor undercounted non-dividing K and ignored M."""
+    from repro.core.capture import _VMAP, _BRANCH_GEMM, _pick_gemm_route
+    from repro.kernels.branch_gemm.ops import select_tiles
+
+    # K=640 halves down to bk=128 → 5 K-tiles; the old k//512 estimate saw 1
+    w = jnp.zeros((640, 128), jnp.float32)
+    bm, bf, bk = select_tiles(8, 640, 128)
+    assert (640 // bk) == 5
+    assert _pick_gemm_route(w, 16, "auto", m=8) == _VMAP       # 16·5 > 64
+    assert _pick_gemm_route(w, 8, "auto", m=8) == _BRANCH_GEMM  # 8·5 ≤ 64
+
+    # M scales the grid too: 4 branches fit at m=512, not at m=4096
+    w2 = jnp.zeros((128, 128), jnp.float32)
+    assert _pick_gemm_route(w2, 4, "auto", m=512) == _BRANCH_GEMM
+    assert _pick_gemm_route(w2, 4, "auto", m=4096) == _VMAP
+    # explicit kernel choice still wins
+    assert _pick_gemm_route(w, 64, "pallas", m=4096) == _BRANCH_GEMM
+    assert _pick_gemm_route(w2, 2, "vmap", m=8) == _VMAP

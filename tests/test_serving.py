@@ -108,15 +108,33 @@ def test_engine_without_session_uses_default(small_model):
 
 
 def test_calibrate_schedule_rejects_partially_payloaded_arch():
-    """Non-dense exports (MoE dispatch/combine, hybrid, rwkv) have cost-only
-    operators without payloads — measured calibration must fail with a
+    """Exports with cost-only operators (hybrid mamba, rwkv scan — builders
+    that don't thread params yet) — measured calibration must fail with a
     diagnosis, not a shape error deep in the profiler."""
-    cfg = get_config("kimi-k2-1t-a32b", smoke=True)
+    cfg = get_config("rwkv6-1.6b", smoke=True)
     model = make_model(cfg)
     params = model.init(jax.random.key(0))
     engine = InferenceEngine(model, params, max_slots=2, max_len=32)
     with pytest.raises(ValueError, match="cost-only operators"):
         engine.calibrate_schedule(n_layers=2)
+
+
+def test_calibrate_schedule_works_on_routed_moe():
+    """MoE engines export the routed (ragged) fan-out with real
+    dispatch/combine payloads, so measured calibration — previously
+    impossible for MoE — now runs end to end."""
+    from repro.core import Session
+
+    cfg = get_config("kimi-k2-1t-a32b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, max_slots=2, max_len=32,
+                             session=Session())
+    plan = engine.calibrate_schedule(n_layers=2)
+    assert plan is engine.schedule_plan
+    assert any(".dispatch" in n.name for n in plan.graph)
+    assert all(n.cost.measured_us is not None
+               for n in plan.graph if n.fn is not None)
 
 
 def test_sampler_modes():
