@@ -36,6 +36,17 @@ SMALL_GPU_SIM = SimConfig(resource_cap=52e6, sync_us=0.5, launch_us=8.0,
                           interference_penalty=0.13, head_of_line=True)
 
 
+def _time_best(fn, repeats: int = 3):
+    """(best_ms, last_result) over ``repeats`` calls — single-shot wall-clock
+    numbers swallow GC/scheduler pauses whole and flap the regression gate."""
+    best, result = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best, result
+
+
 def run(batch: int = 1) -> list[str]:
     RECORDS.clear()
     rows = ["workload,policy,makespan_us,speedup_vs_eager,speedup_vs_cuda_graph"]
@@ -56,12 +67,10 @@ def run(batch: int = 1) -> list[str]:
         res = compare_policies(g, hw=BENCH_HW, cfg=BENCH_SIM,
                                opara_plan=tuned)
         base = res["cuda_graph_sequential"]["makespan_us"]
-        t0 = time.perf_counter()
-        plan = schedule(g, "opara", "opara", hw=BENCH_HW, sim_cfg=BENCH_SIM)
-        t_sched = (time.perf_counter() - t0) * 1e3
-        t0 = time.perf_counter()
-        compile_plan(plan)
-        t_capture = (time.perf_counter() - t0) * 1e3
+        t_sched, plan = _time_best(
+            lambda: schedule(g, "opara", "opara", hw=BENCH_HW,
+                             sim_cfg=BENCH_SIM))
+        t_capture, _ = _time_best(lambda: compile_plan(plan))
         # why the opara makespan moved: the tuned plan's packing efficacy
         # (per-wave resource utilization, same-class overlap) next to the
         # untuned single-policy plan's

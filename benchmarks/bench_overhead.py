@@ -58,12 +58,12 @@ def run() -> list[str]:
     # -- ≥2000-op graph: program-compiler overhead + plan-cache hit ----------
     big = bert_like(1, n_layers=180)          # ~3.8k ops (21 ops/layer)
     sess = Session()
-    t0 = time.perf_counter()
     p_big = schedule(big, "opara", "opara")
-    t_sched = (time.perf_counter() - t0) * 1e3
-    t0 = time.perf_counter()
-    compile_plan(p_big)
-    t_lower = (time.perf_counter() - t0) * 1e3
+    # best-of-3: these rows feed the regression gate, and a single-shot
+    # measurement swallows GC/scheduler pauses whole
+    t_sched = min(_timed(lambda: schedule(big, "opara", "opara"))
+                  for _ in range(3))
+    t_lower = min(_timed(lambda: compile_plan(p_big)) for _ in range(3))
     sess.plan(big)                             # miss (populates the cache)
     t0 = time.perf_counter()
     sess.plan(big)                             # hit

@@ -1,0 +1,186 @@
+"""Chaos smoke: the differential harness, once per injection site.
+
+For each fault site the script arms ``$REPRO_FAULT_PLAN`` (exactly the way
+chaos CI would), runs the matching scenario against a fresh
+:class:`repro.core.Session` / serving engine, and checks the degradation
+contract from ``docs/robustness.md``:
+
+* outputs equal the fault-free ground truth (per-op sequential execution);
+* the degradation is reported — ``Session.cache_stats()`` counters /
+  ``CompiledModel.explain()["degraded"]`` / a FAILED request record.
+
+Exit status is non-zero if any site breaks the contract.
+
+    PYTHONPATH=src python scripts/chaos_smoke.py [--skip-engine]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import traceback
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Session, SessionConfig, run_sequential_uncompiled
+from repro.core.graph import OpGraph, OpKind
+from repro.core.profiler import gemm_cost
+from repro.runtime.faults import ENV_VAR
+from repro.runtime.guard import DegradationWarning
+
+
+def build_branchy_graph(width: int = 3, d: int = 64, tokens: int = 8,
+                        seed: int = 0) -> OpGraph:
+    """Stackable parallel-matmul DAG (the Inception motivation shape)."""
+    rng = np.random.default_rng(seed)
+    g = OpGraph("chaos")
+    inp = g.add("x", OpKind.INPUT, out_shape=(tokens, d))
+    outs = []
+    for b in range(width):
+        w = jnp.asarray(rng.standard_normal((d, d)) * 0.05, jnp.float32)
+        outs.append(g.add(f"gemm{b}", OpKind.GEMM, [inp],
+                          fn=lambda x, w: x @ w, cost=gemm_cost(tokens, d, d, 4),
+                          fuse_sig=("gemm", tokens, d, d), consts=(w,),
+                          payload="matmul"))
+    g.add("sum", OpKind.ELEMENTWISE, outs, fn=lambda *xs: sum(xs))
+    g.validate()
+    return g
+
+
+def build_ragged_graph(sizes=(8, 24, 16), k: int = 128, f: int = 128,
+                       seed: int = 3) -> OpGraph:
+    """Ragged-M matmul fan-out (the MoE expert shape, grouped-GEMM route)."""
+    rng = np.random.default_rng(seed)
+    g = OpGraph("chaos-ragged")
+    for i, m in enumerate(sizes):
+        x = g.add(f"x{i}", OpKind.INPUT, out_shape=(m, k),
+                  out_dtype=jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, f)) * 0.05, jnp.float32)
+        g.add(f"gemm{i}", OpKind.GEMM, [x], fn=lambda x, w: x @ w,
+              cost=gemm_cost(m, k, f, 4), fuse_sig=("gemm", k, f),
+              consts=(w,), payload="matmul", out_shape=(m, f),
+              out_dtype=jnp.float32)
+    g.validate()
+    return g
+
+
+def _graph_inputs(g: OpGraph, seed: int = 9) -> dict:
+    rng = np.random.default_rng(seed)
+    return {n.name: jnp.asarray(rng.standard_normal(n.out_shape) * 0.1,
+                                jnp.float32)
+            for n in g if n.fn is None}
+
+
+def _assert_matches(got, ref, what: str) -> None:
+    for a, b in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=what)
+
+
+def check_graph_site(site: str, ragged: bool = False) -> None:
+    g = build_ragged_graph() if ragged else build_branchy_graph()
+    inputs = _graph_inputs(g)
+    ref = run_sequential_uncompiled(g, inputs)
+    calib = {n.op_id: inputs[n.name] for n in g if n.fn is None}
+    if site == "calib_disk_read":       # the read site needs a populated tier
+        Session().calibrate(g, calib)
+    cfg = SessionConfig(gemm_kernel="auto" if ragged else "pallas",
+                        load_calibration=(site == "calib_disk_read"))
+    sess = Session(cfg)                 # plan comes from $REPRO_FAULT_PLAN
+    model = sess.compile(g, inputs=calib)
+    _assert_matches(model(inputs), ref, f"site={site}")
+    stats = sess.cache_stats()
+    reported = (stats["degraded_routes"] + stats["calib_degraded_analytic"]
+                + stats["calib_disk_errors"])
+    assert reported >= 1, f"site={site}: degradation not reported ({stats})"
+
+
+def check_engine_site() -> None:
+    """decode_step corrupt → ONE poisoned request FAILED, co-batch completes
+    with fault-free outputs."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import InferenceEngine, Request, RequestState
+
+    cfg = get_config("llama3.2-1b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def run():
+        engine = InferenceEngine(model, params, max_slots=3, max_len=32)
+        for rid in range(3):
+            engine.submit(Request(rid=rid, prompt=[1 + rid, 2, 3],
+                                  max_tokens=4))
+        return {r.rid: r for r in engine.run()}
+
+    with _disarmed():
+        clean = run()
+    done = run()
+    failed = [r for r in done.values() if r.state is RequestState.FAILED]
+    assert len(failed) == 1, f"expected 1 FAILED request, got {len(failed)}"
+    survivors = [r for r in done.values() if r.state is RequestState.DONE]
+    assert len(survivors) == 2
+    for r in survivors:
+        assert r.output == clean[r.rid].output, f"rid={r.rid} outputs diverged"
+
+
+class _disarmed:
+    def __enter__(self):
+        self._saved = os.environ.pop(ENV_VAR, None)
+
+    def __exit__(self, *exc):
+        if self._saved is not None:
+            os.environ[ENV_VAR] = self._saved
+
+
+SCENARIOS = [
+    ("kernel_compile:raise:-1", lambda: check_graph_site("kernel_compile")),
+    ("grouped_gemm_route:raise:-1",
+     lambda: check_graph_site("grouped_gemm_route", ragged=True)),
+    ("calibration_measure:raise:-1",
+     lambda: check_graph_site("calibration_measure")),
+    ("calib_disk_read:raise:-1", lambda: check_graph_site("calib_disk_read")),
+    ("calib_disk_write:raise:-1",
+     lambda: check_graph_site("calib_disk_write")),
+    ("plan_validate:raise:-1", lambda: check_graph_site("plan_validate")),
+    ("decode_step:corrupt:1:0", check_engine_site),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-engine", action="store_true",
+                    help="skip the (slower) serving-engine decode scenario")
+    args = ap.parse_args(argv)
+    failures = 0
+    with tempfile.TemporaryDirectory() as calib_dir:
+        os.environ["REPRO_CALIB_DIR"] = calib_dir
+        for spec, scenario in SCENARIOS:
+            if args.skip_engine and spec.startswith("decode_step"):
+                print(f"[chaos] SKIP {spec}")
+                continue
+            os.environ[ENV_VAR] = spec
+            try:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", DegradationWarning)
+                    scenario()
+                print(f"[chaos] PASS {spec}")
+            except Exception:
+                failures += 1
+                print(f"[chaos] FAIL {spec}")
+                traceback.print_exc()
+            finally:
+                os.environ.pop(ENV_VAR, None)
+    print(f"[chaos] {len(SCENARIOS) - failures}/{len(SCENARIOS)} sites clean")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import INTERPRET_GRID_LIMIT as _INTERPRET_GRID_LIMIT
+from ..runtime.faults import FaultPlan, get_active as _active_faults
+from ..runtime.guard import DegradationLog
 from .fusion import WaveSchedule
 from .graph import OpGraph
 
@@ -95,6 +97,11 @@ class CapturedGraph:
     # input names in input_ids order, precomputed at capture time so the
     # replay path does no per-call graph walks
     input_names: tuple[str, ...] = ()
+    # capture-time route fallbacks (branch_gemm→vmap, grouped→sequential)
+    # plus any call-time jitted→sequential rescue — read by
+    # Session.cache_stats()["degraded_routes"] and CompiledModel.explain()
+    degradations: DegradationLog = dataclasses.field(
+        default_factory=DegradationLog)
 
     def __post_init__(self) -> None:
         if not self.input_names:
@@ -103,7 +110,21 @@ class CapturedGraph:
 
     def __call__(self, inputs: Mapping[str, Any]) -> list[Any]:
         args = self._bind(inputs)
-        return self.jitted(*args)
+        try:
+            return self.jitted(*args)
+        except Exception as exc:
+            # bottom rung of the ladder: the compiled program failed to
+            # trace/launch — replay per-op in topo order (the differential
+            # harness's own ground truth).  If that fails too, the original
+            # error was real: surface it, not the fallback's.
+            try:
+                outs = run_sequential_uncompiled(self.graph, inputs,
+                                                 self.output_ids)
+            except Exception:
+                raise exc
+            self.degradations.note("execute", "jitted->sequential",
+                                   repr(exc), warn=True)
+            return outs
 
     def call_uncompiled(self, inputs: Mapping[str, Any]) -> list[Any]:
         args = self._bind(inputs)
@@ -367,71 +388,129 @@ def _validate_waves(graph: OpGraph, schedule: WaveSchedule) -> None:
                     f"wave {wave_of[p]}, consumer in wave {wave_of[node.op_id]}")
 
 
+def _single_steps(graph: OpGraph, group: Sequence[int],
+                  slot_of: dict[int, int]) -> list[Step]:
+    """Per-op call steps — the fallback floor every fused route degrades to
+    (semantically identical to unfused execution by construction)."""
+    out: list[Step] = []
+    for op in group:
+        node = graph.nodes[op]
+        if node.fn is None:
+            continue
+        out.append(Step(
+            route=_CALL, fn=node.fn,
+            arg_slots=tuple(slot_of[p] for p in node.inputs),
+            consts=tuple(node.meta.get("consts", ())),
+            out_slots=(slot_of[op],), free_slots=(),
+            op_ids=(op,)))
+    return out
+
+
+def _lower_group(
+    graph: OpGraph,
+    group: Sequence[int],
+    slot_of: dict[int, int],
+    gemm_kernel: str,
+    faults: FaultPlan | None,
+    log: DegradationLog,
+) -> list[Step]:
+    """Lower one fusion group down the route ladder:
+    grouped_gemm → branch_gemm → vmap → per-op sequential.
+
+    Injected faults (sites ``kernel_compile`` / ``grouped_gemm_route``) and
+    REAL construction failures (a const that won't stack, a kernel that
+    won't build) take the same recovery edge: the next-slower route that
+    computes the identical function, recorded in ``log``."""
+    if _can_stack(graph, group):
+        nodes = [graph.nodes[o] for o in group]
+        arity = len(nodes[0].inputs)
+        arg_slots = tuple(
+            tuple(slot_of[n.inputs[a]] for n in nodes)
+            for a in range(arity)
+        )
+        try:
+            consts = _stack_consts(graph, group)
+        except Exception as exc:
+            log.note("kernel_compile", "stacked->sequential", repr(exc),
+                     warn=True)
+            return _single_steps(graph, group, slot_of)
+        if _gemm_routable(graph, group):
+            # _can_stack guarantees all declared shapes agree — use
+            # the first declared one (any branch may omit it)
+            shape = next((s for s in
+                          _branch_input_shapes(graph, group)
+                          if s is not None), None)
+            m = (int(math.prod(shape[:-1]))
+                 if shape is not None else None)
+            route = _pick_gemm_route(
+                nodes[0].meta["consts"][0], len(group), gemm_kernel,
+                m=m)
+            if route == _BRANCH_GEMM and faults is not None:
+                try:
+                    faults.fire("kernel_compile")
+                except Exception as exc:
+                    log.note("kernel_compile", "branch_gemm->vmap",
+                             repr(exc))
+                    route = _VMAP
+        else:
+            route = _VMAP
+        try:
+            fn = (_branch_gemm_step() if route == _BRANCH_GEMM
+                  else jax.vmap(nodes[0].fn))
+        except Exception as exc:
+            log.note("kernel_compile", f"{route}->sequential", repr(exc),
+                     warn=True)
+            return _single_steps(graph, group, slot_of)
+        return [Step(
+            route=route, fn=fn, arg_slots=arg_slots, consts=consts,
+            out_slots=tuple(slot_of[o] for o in group),
+            free_slots=(), op_ids=tuple(group))]
+    if (gemm_kernel != "vmap"
+            and (ragged := _ragged_group_sizes(graph, group)) is not None):
+        # ragged-M matmul group: ONE grouped kernel instead of N
+        # serialized branches (jnp.stack is impossible here)
+        if faults is not None:
+            try:
+                faults.fire("grouped_gemm_route")
+            except Exception as exc:
+                log.note("grouped_gemm_route", "grouped_gemm->sequential",
+                         repr(exc))
+                return _single_steps(graph, group, slot_of)
+        nodes = [graph.nodes[o] for o in group]
+        try:
+            consts = _stack_consts(graph, group)
+        except Exception as exc:
+            log.note("grouped_gemm_route", "grouped_gemm->sequential",
+                     repr(exc), warn=True)
+            return _single_steps(graph, group, slot_of)
+        return [Step(
+            route=_GROUPED_GEMM, fn=_grouped_gemm_step(ragged),
+            arg_slots=(tuple(slot_of[n.inputs[0]] for n in nodes),),
+            consts=consts,
+            out_slots=tuple(slot_of[o] for o in group),
+            free_slots=(), op_ids=tuple(group),
+            group_sizes=ragged)]
+    return _single_steps(graph, group, slot_of)
+
+
 def _lower(
     graph: OpGraph,
     schedule: WaveSchedule,
     output_ids: Sequence[int],
     gemm_kernel: str = "auto",
-) -> tuple[list[Step], dict[int, int], int]:
+    faults: FaultPlan | None = None,
+    log: DegradationLog | None = None,
+) -> tuple[list[Step], dict[int, int], int, DegradationLog]:
     """Phase 1: wave schedule → pre-lowered step list + slot assignment."""
     slot_of = {op: k for k, op in enumerate(graph.nodes)}
     n_slots = len(slot_of)
+    log = log if log is not None else DegradationLog()
 
     steps: list[Step] = []
     for wave in schedule.waves:
         for group in wave.fusion_groups:
-            if _can_stack(graph, group):
-                nodes = [graph.nodes[o] for o in group]
-                arity = len(nodes[0].inputs)
-                arg_slots = tuple(
-                    tuple(slot_of[n.inputs[a]] for n in nodes)
-                    for a in range(arity)
-                )
-                consts = _stack_consts(graph, group)
-                if _gemm_routable(graph, group):
-                    # _can_stack guarantees all declared shapes agree — use
-                    # the first declared one (any branch may omit it)
-                    shape = next((s for s in
-                                  _branch_input_shapes(graph, group)
-                                  if s is not None), None)
-                    m = (int(math.prod(shape[:-1]))
-                         if shape is not None else None)
-                    route = _pick_gemm_route(
-                        nodes[0].meta["consts"][0], len(group), gemm_kernel,
-                        m=m)
-                else:
-                    route = _VMAP
-                fn = (_branch_gemm_step() if route == _BRANCH_GEMM
-                      else jax.vmap(nodes[0].fn))
-                steps.append(Step(
-                    route=route, fn=fn, arg_slots=arg_slots, consts=consts,
-                    out_slots=tuple(slot_of[o] for o in group),
-                    free_slots=(), op_ids=tuple(group)))
-            elif (gemm_kernel != "vmap"
-                  and (ragged := _ragged_group_sizes(graph, group))
-                  is not None):
-                # ragged-M matmul group: ONE grouped kernel instead of N
-                # serialized branches (jnp.stack is impossible here)
-                nodes = [graph.nodes[o] for o in group]
-                consts = _stack_consts(graph, group)
-                steps.append(Step(
-                    route=_GROUPED_GEMM, fn=_grouped_gemm_step(ragged),
-                    arg_slots=(tuple(slot_of[n.inputs[0]] for n in nodes),),
-                    consts=consts,
-                    out_slots=tuple(slot_of[o] for o in group),
-                    free_slots=(), op_ids=tuple(group),
-                    group_sizes=ragged))
-            else:
-                for op in group:
-                    node = graph.nodes[op]
-                    if node.fn is None:
-                        continue
-                    steps.append(Step(
-                        route=_CALL, fn=node.fn,
-                        arg_slots=tuple(slot_of[p] for p in node.inputs),
-                        consts=tuple(node.meta.get("consts", ())),
-                        out_slots=(slot_of[op],), free_slots=(),
-                        op_ids=(op,)))
+            steps.extend(
+                _lower_group(graph, group, slot_of, gemm_kernel, faults, log))
 
     # dead-slot analysis: a slot is freed right after its last consuming
     # step — or, for outputs nothing ever consumes (and which aren't program
@@ -453,7 +532,7 @@ def _lower(
         dead += [s for s in step.out_slots
                  if s not in keep and s not in last_use]
         step.free_slots = tuple(dead)
-    return steps, slot_of, n_slots
+    return steps, slot_of, n_slots, log
 
 
 def capture(
@@ -462,6 +541,7 @@ def capture(
     output_ids: Sequence[int] | None = None,
     donate_inputs: bool = False,
     gemm_kernel: str = "auto",
+    faults: FaultPlan | None = None,
 ) -> CapturedGraph:
     """Build the single-program executable from a wave schedule.
 
@@ -472,9 +552,22 @@ def capture(
     groups take the grouped kernel under ``"auto"``/``"pallas"`` and fall
     back to per-branch calls under ``"vmap"`` (a ragged group cannot be
     vmapped).
+
+    ``faults`` (default: the process-wide plan, if any) arms the
+    ``plan_validate`` / ``kernel_compile`` / ``grouped_gemm_route``
+    injection sites.  Route-level recovery happens here (see
+    :func:`_lower_group`, recorded on ``CapturedGraph.degradations``);
+    a ``plan_validate`` failure raises out — :class:`repro.core.Session`
+    owns that rung (re-schedule sequential).
     """
     if gemm_kernel not in ("auto", "pallas", "vmap"):
         raise ValueError(f"unknown gemm_kernel {gemm_kernel!r}")
+    if faults is None:
+        faults = _active_faults()
+    if faults is not None:
+        # models a corrupted/stale plan arriving at the capturer: the same
+        # ValueError surface _validate_waves raises for real corruption
+        faults.fire("plan_validate")
     graph.validate()
     _validate_waves(graph, schedule)
     input_ids = [n.op_id for n in graph if n.fn is None]
@@ -482,7 +575,8 @@ def capture(
         output_ids = graph.leaves()
     output_ids = list(output_ids)
 
-    steps, slot_of, n_slots = _lower(graph, schedule, output_ids, gemm_kernel)
+    steps, slot_of, n_slots, deg_log = _lower(
+        graph, schedule, output_ids, gemm_kernel, faults=faults)
     input_slots = [slot_of[i] for i in input_ids]
     output_slots = [slot_of[o] for o in output_ids]
     tree_map = jax.tree_util.tree_map
@@ -521,6 +615,7 @@ def capture(
         fn=run,
         jitted=jax.jit(run, **jit_kwargs),
         steps=steps,
+        degradations=deg_log,
     )
 
 

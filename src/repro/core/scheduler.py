@@ -273,9 +273,10 @@ def autotune(
 
 
 def compile_plan(plan: SchedulePlan, output_ids=None, donate_inputs=False,
-                 gemm_kernel: str = "auto") -> CapturedGraph:
+                 gemm_kernel: str = "auto", faults=None) -> CapturedGraph:
     return capture(plan.graph, plan.waves, output_ids=output_ids,
-                   donate_inputs=donate_inputs, gemm_kernel=gemm_kernel)
+                   donate_inputs=donate_inputs, gemm_kernel=gemm_kernel,
+                   faults=faults)
 
 
 def simulate_plan(plan: SchedulePlan, cfg: SimConfig = SimConfig()) -> SimResult:

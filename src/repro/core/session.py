@@ -51,6 +51,8 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from ..runtime.faults import FaultPlan, get_active as _active_faults
+from ..runtime.guard import DegradationLog, retry_with_backoff
 from .capture import CapturedGraph
 from .graph import OpGraph
 from .launch_order import ORDER_POLICIES
@@ -75,7 +77,16 @@ _CALIB_DIR_ENV = "REPRO_CALIB_DIR"
 _DISK_CACHE_MAX = 512     # default disk-tier bound
 
 _STAT_KEYS = ("plan_hits", "plan_misses", "exec_hits", "exec_misses",
-              "calib_hits", "calib_misses", "calib_disk_hits")
+              "calib_hits", "calib_misses", "calib_disk_hits",
+              # graceful-degradation provenance (docs/robustness.md):
+              "calib_retries",             # measure re-attempts that happened
+              "calib_degraded_analytic",   # measured→analytic degradations
+              "calib_disk_errors",         # disk tier read/write failures
+              "degraded_routes")           # capture/plan fallback edges taken
+
+# fault-proof sentinel for ladder-floor paths: an empty plan fires nothing
+# AND suppresses the process-wide/env plan (passing None would re-resolve it)
+_NO_FAULTS = FaultPlan()
 
 
 # =========================================================================
@@ -105,6 +116,14 @@ class SessionConfig:
     calibration_repeats: int = 3
     load_calibration: bool = True         # consult the disk tier
     calib_dir: str | None = None          # None → $REPRO_CALIB_DIR / default
+    # -- graceful degradation (docs/robustness.md) --------------------------
+    calib_retries: int = 2                # measure re-attempts before the
+                                          # analytic-profile degrade
+    calib_backoff_s: float = 0.0          # base retry backoff (doubles per
+                                          # attempt; clock is injectable via
+                                          # Session._sleep, 0 = no waiting)
+    fault_plan: FaultPlan | None = None   # per-session injection plan (None
+                                          # → $REPRO_FAULT_PLAN, if set)
     # -- cache sizing -------------------------------------------------------
     cache_size: int = _CACHE_SIZE         # per-session LRU bound (each tier)
     disk_cache_entries: int = _DISK_CACHE_MAX
@@ -120,6 +139,10 @@ class SessionConfig:
             raise ValueError(f"unknown gemm_kernel {self.gemm_kernel!r}")
         if self.cache_size < 1:
             raise ValueError("cache_size must be >= 1")
+        if self.calib_retries < 0:
+            raise ValueError("calib_retries must be >= 0")
+        if self.calib_backoff_s < 0:
+            raise ValueError("calib_backoff_s must be >= 0")
 
 
 # =========================================================================
@@ -244,35 +267,62 @@ def _calib_path(key: tuple, dirpath: str | None = None) -> str:
     return os.path.join(_calib_dir(dirpath), f"{digest}.json")
 
 
-def _calib_disk_load(key: tuple, dirpath: str | None = None) -> ProfileTable | None:
+def _calib_disk_load(key: tuple, dirpath: str | None = None,
+                     faults: FaultPlan | None = None) -> ProfileTable | None:
+    """Read one disk-tier entry.  Corruption-safe by construction: torn or
+    mangled JSON (real, or injected via the ``calib_disk_read`` corrupt
+    mode) parses to ``None`` → the caller treats it as a miss.  A
+    raise-mode fault propagates (the session's guard counts it and degrades
+    to the memory tier)."""
     try:
         with open(_calib_path(key, dirpath)) as f:
-            doc = json.load(f)
+            raw = f.read()
+        if faults is not None:
+            raw = faults.fire("calib_disk_read", payload=raw)
+        doc = json.loads(raw)
     except (OSError, ValueError):
         return None
-    if doc.get("key") != repr(key):   # sha1 collision / stale format
-        return None
-    return ProfileTable(
-        hw_name=doc["hw_name"],
-        measured_us=tuple((int(i), float(us)) for i, us in doc["measured_us"]))
+    if not isinstance(doc, dict) or doc.get("key") != repr(key):
+        return None               # sha1 collision / stale format / corrupt
+    try:
+        return ProfileTable(
+            hw_name=doc["hw_name"],
+            measured_us=tuple((int(i), float(us))
+                              for i, us in doc["measured_us"]))
+    except (KeyError, TypeError, ValueError):
+        return None               # structurally corrupt entry → miss
 
 
 def _calib_disk_store(key: tuple, table: ProfileTable,
                       dirpath: str | None = None,
-                      max_entries: int = _DISK_CACHE_MAX) -> None:
-    """Best-effort atomic write; serving must never fail on a full disk."""
+                      max_entries: int = _DISK_CACHE_MAX,
+                      faults: FaultPlan | None = None) -> None:
+    """Best-effort atomic write; serving must never fail on a full disk.
+
+    The write is tmp-file + ``os.replace``, so a crash mid-write (including
+    an injected ``calib_disk_write`` raise) never publishes a partial entry
+    and never strands the temp file.  Corrupt-mode injection mangles the
+    payload *content* — the published entry is then atomically whole but
+    unparseable, which the read path survives as a miss."""
     d = _calib_dir(dirpath)
     tmp = None
     try:
+        payload = json.dumps({"key": repr(key), "hw_name": table.hw_name,
+                              "measured_us": [list(m)
+                                              for m in table.measured_us]})
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        if faults is not None:
+            payload = faults.fire("calib_disk_write", payload=payload)
         with os.fdopen(fd, "w") as f:
-            json.dump({"key": repr(key), "hw_name": table.hw_name,
-                       "measured_us": [list(m) for m in table.measured_us]}, f)
+            f.write(payload)
         os.replace(tmp, _calib_path(key, dirpath))
+        tmp = None
         _calib_disk_evict(d, max_entries)
     except OSError:
-        if tmp is not None:   # don't strand the temp file on a full disk
+        pass                      # full disk / permissions: memory tier only
+    finally:                      # injected faults reach the session's guard
+        if tmp is not None:       # never strand the temp file
             try:
                 os.unlink(tmp)
             except OSError:
@@ -313,10 +363,14 @@ class CompiledModel:
     graph: OpGraph
     plan: SchedulePlan
     executable: CapturedGraph
-    # "calibration": measured | memory | disk | off
-    # "plan" / "executable": hit | miss
+    # "calibration": measured | memory | disk | analytic (degraded) | off
+    # "plan" / "executable": hit | miss | degraded
     provenance: dict[str, str]
     timings_ms: dict[str, float]          # calibrate / plan / compile / total
+    # structured fallback events recorded while THIS model was built
+    # (site / action / reason dicts — see docs/robustness.md)
+    degradations: list[dict[str, str]] = dataclasses.field(
+        default_factory=list)
 
     def __call__(self, inputs: Mapping[str | int, Any]) -> list:
         return self.executable(inputs)
@@ -343,6 +397,12 @@ class CompiledModel:
                 "weights_key": cfg.weights_key,
             },
             "cache": dict(self.provenance),
+            # build-time fallbacks PLUS any call-time jitted→sequential
+            # rescue the executable recorded since (live view)
+            "degraded": (list(self.degradations)
+                         + [e.as_dict()
+                            for e in self.executable.degradations.events
+                            if e.site == "execute"]),
             "stages_ms": dict(
                 self.timings_ms,
                 alloc=p.alloc_time_ms,
@@ -381,11 +441,36 @@ class Session:
         self._exec_cache: OrderedDict[tuple, CapturedGraph] = OrderedDict()
         self._calib_cache: OrderedDict[tuple, ProfileTable] = OrderedDict()
         self._stats = {k: 0 for k in _STAT_KEYS}
+        # structured record of every fallback this session took
+        self.guard_log = DegradationLog()
+        # injectable clock for calibration retry backoff (tests swap it)
+        self._sleep = time.sleep
+
+    @property
+    def faults(self) -> FaultPlan | None:
+        """The armed injection plan: per-session config wins, else the
+        process-wide/env plan (resolved lazily so chaos harnesses can arm
+        ``$REPRO_FAULT_PLAN`` around an existing session)."""
+        return (self.config.fault_plan if self.config.fault_plan is not None
+                else _active_faults())
+
+    def note_degradation(self, site: str, action: str, reason: str,
+                         warn: bool = True) -> None:
+        """Record an externally detected degradation against this session
+        (e.g. the serving engine's measured→analytic calibration fallback)
+        so ``cache_stats()`` provenance stays complete."""
+        self.guard_log.note(site, action, reason, warn=warn)
+        if site == "calibration_measure":
+            self._stats["calib_degraded_analytic"] += 1
+        elif site in ("calib_disk_read", "calib_disk_write"):
+            self._stats["calib_disk_errors"] += 1
+        else:
+            self._stats["degraded_routes"] += 1
 
     # -- calibration --------------------------------------------------------
     def calibrate(self, graph: OpGraph, inputs: Mapping[int, Any],
                   repeats: int | None = None,
-                  load: bool | None = None) -> ProfileTable:
+                  load: bool | None = None) -> ProfileTable | None:
         """Hydrate ``graph`` with a measured profile, timing at most once.
 
         Memory-cache hit → the stored table is re-applied (zero re-timing);
@@ -395,6 +480,12 @@ class Session:
         profiling inference (the paper's "profile each DNN inference only
         once"), stored to both tiers for every structurally identical graph
         — including one built by a later process — that follows.
+
+        If measurement keeps failing after ``SessionConfig.calib_retries``
+        re-attempts, the session degrades to the analytic cost model:
+        ``None`` is returned, one :class:`DegradationWarning` is emitted and
+        ``cache_stats()["calib_degraded_analytic"]`` increments — scheduling
+        proceeds on analytic costs instead of crashing the build.
         """
         table, _ = self._calibrate(graph, inputs, self.config,
                                    repeats=repeats, load=load)
@@ -402,29 +493,74 @@ class Session:
 
     def _calibrate(self, graph: OpGraph, inputs: Mapping[int, Any],
                    cfg: SessionConfig, repeats: int | None = None,
-                   load: bool | None = None) -> tuple[ProfileTable, str]:
+                   load: bool | None = None) -> tuple[ProfileTable | None, str]:
         repeats = cfg.calibration_repeats if repeats is None else repeats
         load = cfg.load_calibration if load is None else load
         key = calibration_key(graph, inputs, cfg.hw)
+        faults = self.faults
         provenance = "memory"
         table = _lru_get(self._calib_cache, key)
         if table is not None:
             self._stats["calib_hits"] += 1            # memory-tier hit
-        elif load and (table := _calib_disk_load(key, cfg.calib_dir)) is not None:
-            self._stats["calib_disk_hits"] += 1       # disk-tier hit
-            provenance = "disk"
-            _lru_put(self._calib_cache, key, table, cfg.cache_size)
         else:
-            self._stats["calib_misses"] += 1
-            provenance = "measured"
-            table = ModelProfiler(cfg.hw).measure(graph, inputs,
-                                                  repeats=repeats)
-            _lru_put(self._calib_cache, key, table, cfg.cache_size)
-            _calib_disk_store(key, table, cfg.calib_dir,
-                              cfg.disk_cache_entries)
-        if graph.calibration_fp != table.fingerprint:
+            disk = None
+            if load:
+                try:
+                    disk = _calib_disk_load(key, cfg.calib_dir, faults=faults)
+                except Exception as exc:              # injected / exotic I/O
+                    self._stats["calib_disk_errors"] += 1
+                    self.guard_log.note("calib_disk_read",
+                                        "disk->memory-tier", repr(exc))
+            if disk is not None:
+                self._stats["calib_disk_hits"] += 1   # disk-tier hit
+                provenance = "disk"
+                table = disk
+                _lru_put(self._calib_cache, key, table, cfg.cache_size)
+            else:
+                table, provenance = self._measure_or_degrade(
+                    graph, inputs, cfg, key, repeats, faults)
+        if table is not None and graph.calibration_fp != table.fingerprint:
             apply_profile(graph, table)
         return table, provenance
+
+    def _measure_or_degrade(self, graph: OpGraph, inputs: Mapping[int, Any],
+                            cfg: SessionConfig, key: tuple, repeats: int,
+                            faults: FaultPlan | None,
+                            ) -> tuple[ProfileTable | None, str]:
+        """Full-miss rung of the calibration ladder: measure (with bounded
+        retry + backoff), then — only if every attempt failed — degrade to
+        the analytic cost model rather than fail the build."""
+        self._stats["calib_misses"] += 1
+
+        def _measure() -> ProfileTable:
+            if faults is not None:
+                faults.fire("calibration_measure")
+            return ModelProfiler(cfg.hw).measure(graph, inputs,
+                                                 repeats=repeats)
+
+        def _on_retry(attempt: int, exc: BaseException) -> None:
+            self._stats["calib_retries"] += 1
+            self.guard_log.note("calibration_measure",
+                                f"retry#{attempt + 1}", repr(exc))
+
+        try:
+            table = retry_with_backoff(_measure, retries=cfg.calib_retries,
+                                       base_delay_s=cfg.calib_backoff_s,
+                                       sleep=self._sleep, on_retry=_on_retry)
+        except Exception as exc:
+            self._stats["calib_degraded_analytic"] += 1
+            self.guard_log.note("calibration_measure", "measured->analytic",
+                                repr(exc), warn=True)
+            return None, "analytic (degraded)"
+        _lru_put(self._calib_cache, key, table, cfg.cache_size)
+        try:
+            _calib_disk_store(key, table, cfg.calib_dir,
+                              cfg.disk_cache_entries, faults=faults)
+        except Exception as exc:                      # injected write fault
+            self._stats["calib_disk_errors"] += 1
+            self.guard_log.note("calib_disk_write", "disk->memory-tier",
+                                repr(exc))
+        return table, "measured"
 
     # -- planning -----------------------------------------------------------
     def plan(self, graph: OpGraph,
@@ -487,7 +623,8 @@ class Session:
                  output_ids=None, cache: bool = True) -> tuple[CapturedGraph, str]:
         if not cache:
             return compile_plan(p, output_ids=output_ids,
-                                gemm_kernel=cfg.gemm_kernel), "uncached"
+                                gemm_kernel=cfg.gemm_kernel,
+                                faults=self.faults), "uncached"
         key = (
             _plan_key(graph, cfg),   # byte-identical to the plan-cache key
             cfg.weights_key,
@@ -500,8 +637,30 @@ class Session:
             self._stats["exec_hits"] += 1
             return hit, "hit"
         self._stats["exec_misses"] += 1
-        exe = compile_plan(p, output_ids=output_ids,
-                           gemm_kernel=cfg.gemm_kernel)
+        try:
+            exe = compile_plan(p, output_ids=output_ids,
+                               gemm_kernel=cfg.gemm_kernel,
+                               faults=self.faults)
+        except Exception as exc:
+            # Plan-level failure (e.g. injected/real validation error): the
+            # ladder floor is a fresh single-stream sequential schedule
+            # compiled with the portable vmap route and no injection — the
+            # same ops in dependency order, so outputs are identical.
+            self._stats["degraded_routes"] += 1
+            self.guard_log.note("plan_validate", "schedule->sequential",
+                                repr(exc), warn=True)
+            safe = schedule(graph, "sequential", "topo", cfg.hw)
+            exe = compile_plan(safe, output_ids=output_ids,
+                               gemm_kernel="vmap", faults=_NO_FAULTS)
+            return exe, "degraded"   # never cached: fault may be transient
+        if len(exe.degradations):
+            # Route-level fallbacks inside capture (branch_gemm→vmap,
+            # grouped_gemm→sequential, ...): correct but slower — surface
+            # them and keep the degraded executable OUT of the LRU so a
+            # transient fault cannot pin the slow path for future builds.
+            self._stats["degraded_routes"] += len(exe.degradations)
+            self.guard_log.extend(exe.degradations)
+            return exe, "degraded"
         _lru_put(self._exec_cache, key, exe, cfg.cache_size)
         return exe, "miss"
 
@@ -519,6 +678,7 @@ class Session:
         """
         cfg = self.config
         t_total0 = time.perf_counter()
+        mark = len(self.guard_log)        # events from THIS build start here
         timings = {"calibrate": 0.0, "plan": 0.0, "compile": 0.0}
         provenance = {"calibration": "off"}
         if inputs is not None:
@@ -535,7 +695,9 @@ class Session:
         timings["total"] = (time.perf_counter() - t_total0) * 1e3
         return CompiledModel(config=cfg, graph=graph, plan=p,
                              executable=exe, provenance=provenance,
-                             timings_ms=timings)
+                             timings_ms=timings,
+                             degradations=[e.as_dict() for e
+                                           in self.guard_log.events[mark:]])
 
     # -- introspection / lifecycle ------------------------------------------
     def cache_stats(self) -> dict[str, int]:

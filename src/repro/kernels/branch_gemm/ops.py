@@ -1,9 +1,15 @@
 """Public jit'd wrapper: Pallas on TPU, interpret on CPU, ref fallback for
-non-tileable shapes."""
+non-tileable shapes — and for Pallas lowering failures (real or injected
+via the ``kernel_compile`` fault site), since the einsum ref computes the
+identical function."""
 from __future__ import annotations
+
+import warnings
 
 import jax
 
+from ...runtime.faults import maybe_fire
+from ...runtime.guard import DegradationWarning
 from .. import interpret_mode
 from .kernel import branch_gemm_pallas
 from .ref import branch_gemm_ref
@@ -37,5 +43,12 @@ def branch_gemm(x: jax.Array, w: jax.Array, bm: int = 128, bf: int = 128,
     if tiles is None:
         return branch_gemm_ref(x, w)
     bm, bf, bk = tiles
-    return branch_gemm_pallas(x, w, bm=bm, bf=bf, bk=bk,
-                              interpret=interpret_mode())
+    try:
+        maybe_fire("kernel_compile")
+        return branch_gemm_pallas(x, w, bm=bm, bf=bf, bk=bk,
+                                  interpret=interpret_mode())
+    except Exception as exc:
+        warnings.warn(f"branch_gemm: Pallas launch failed ({exc!r}); "
+                      "running the einsum reference",
+                      DegradationWarning, stacklevel=2)
+        return branch_gemm_ref(x, w)

@@ -10,9 +10,13 @@ reference, which is still ONE fused op inside the captured program.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
+from ...runtime.faults import maybe_fire
+from ...runtime.guard import DegradationWarning
 from .. import INTERPRET_GRID_LIMIT, interpret_mode
 from ..branch_gemm.ops import select_tiles
 from .kernel import grouped_gemm_pallas
@@ -64,8 +68,19 @@ def grouped_gemm_parts(xs: list[jax.Array], w: jax.Array,
         if x.shape[0]:
             segs.append(x)
     xp = jnp.concatenate(segs, axis=0)
-    out = grouped_gemm_pallas(xp, w, tuple(tile_group), bm=bm, bf=bf, bk=bk,
-                              interpret=interpret_mode())
+    try:
+        maybe_fire("grouped_gemm_route")
+        out = grouped_gemm_pallas(xp, w, tuple(tile_group), bm=bm, bf=bf,
+                                  bk=bk, interpret=interpret_mode())
+    except Exception as exc:
+        # Pallas launch failure (real, or injected via the
+        # ``grouped_gemm_route`` site): the per-part einsum reference
+        # computes the identical function
+        warnings.warn(f"grouped_gemm: Pallas launch failed ({exc!r}); "
+                      "running the einsum reference",
+                      DegradationWarning, stacklevel=2)
+        return [grouped_gemm_ref(x, w[i:i + 1], (m,))
+                for i, (x, m) in enumerate(zip(xs, group_sizes))]
     # strip the per-group padding rows
     outs, off = [], 0
     for m in group_sizes:

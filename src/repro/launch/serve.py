@@ -31,10 +31,15 @@ def serve(arch: str, n_requests: int, max_tokens: int, slots: int = 4,
                              session=session, calibrate=calibrate)
     if calibrate and engine.schedule_plan is not None:
         p = engine.schedule_plan
-        print(f"[serve] opara schedule: streams={p.n_streams} "
+        stats = session.cache_stats()
+        # non-profileable archs degrade to the analytic cost model inside
+        # calibrate_schedule (one DegradationWarning) — surface it here too
+        mode = ("analytic (degraded)" if stats["calib_degraded_analytic"]
+                else "measured")
+        print(f"[serve] opara schedule [{mode}]: streams={p.n_streams} "
               f"waves={p.waves.n_waves} (calibration "
-              f"{session.cache_stats()['calib_misses']} timed / "
-              f"{session.cache_stats()['calib_hits']} cached)")
+              f"{stats['calib_misses']} timed / "
+              f"{stats['calib_hits']} cached)")
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for rid in range(n_requests):
@@ -43,13 +48,18 @@ def serve(arch: str, n_requests: int, max_tokens: int, slots: int = 4,
                               temperature=temperature))
     done = engine.run()
     wall = time.perf_counter() - t0
+    from ..serving import RequestState
+    failed = [r for r in done if r.state is RequestState.FAILED]
     total_tokens = sum(len(r.output) for r in done)
     result = {
-        "completed": len(done),
+        "completed": len(done) - len(failed),
+        "failed": len(failed),
         "total_tokens": total_tokens,
         "wall_s": wall,
         "tok_per_s": total_tokens / wall if wall > 0 else 0.0,
     }
+    for r in failed[:4]:
+        print(f"[serve] rid={r.rid} FAILED: {r.error}")
     for r in done[:4]:
         print(f"[serve] rid={r.rid} prompt_len={len(r.prompt)} "
               f"out={r.output[:8]}{'...' if len(r.output) > 8 else ''}")

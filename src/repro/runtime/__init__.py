@@ -4,6 +4,17 @@ from .fault_tolerance import (
     HeartbeatMonitor,
     StragglerDetector,
 )
+from .faults import FaultInjected, FaultPlan, FaultSpec, activate, maybe_fire
+from .guard import (
+    Degradation,
+    DegradationLog,
+    DegradationWarning,
+    retry_with_backoff,
+)
 
 __all__ = ["ElasticController", "FailureDetector", "HeartbeatMonitor",
-           "StragglerDetector"]
+           "StragglerDetector",
+           "FaultInjected", "FaultPlan", "FaultSpec", "activate",
+           "maybe_fire",
+           "Degradation", "DegradationLog", "DegradationWarning",
+           "retry_with_backoff"]

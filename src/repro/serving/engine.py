@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 import weakref
 from typing import Any
 
@@ -37,6 +38,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import Model
+from ..runtime.faults import FaultPlan, get_active as _active_faults
+from ..runtime.guard import DegradationWarning
 from .sampler import sample_token
 
 # Executable reuse across engine instances (the serving-side analogue of the
@@ -53,7 +56,19 @@ def _cached_decode_fn(model: Model):
         # value would pin the weak key forever and the entry could never be
         # evicted.  At trace time the model is alive (the engine holds it).
         ref = weakref.ref(model)
-        fn = jax.jit(lambda p, c, t, pos: ref().decode(p, t, c, pos))
+
+        def _step(p, c, t, pos):
+            m = ref()
+            if m is None:
+                # a stale cached fn outliving its model used to surface as
+                # an opaque AttributeError on None — diagnose it instead
+                raise RuntimeError(
+                    "decode step: model was garbage-collected; the cached "
+                    "decode fn outlived the model it was traced for — "
+                    "rebuild the InferenceEngine with a live model")
+            return m.decode(p, t, c, pos)
+
+        fn = jax.jit(_step)
         _DECODE_JIT_CACHE[model] = fn
     return fn
 
@@ -62,6 +77,9 @@ class RequestState(enum.Enum):
     PENDING = "pending"
     RUNNING = "running"
     DONE = "done"
+    # terminal: this request was poisoned (non-finite logits, prefill
+    # failure) and was evicted WITHOUT killing co-batched requests
+    FAILED = "failed"
 
 
 @dataclasses.dataclass
@@ -73,18 +91,27 @@ class Request:
     eos_id: int | None = None
     state: RequestState = RequestState.PENDING
     output: list[int] = dataclasses.field(default_factory=list)
+    error: str | None = None          # diagnosis when state is FAILED
 
 
 class InferenceEngine:
     def __init__(self, model: Model, params, max_slots: int = 4,
                  max_len: int = 512, seed: int = 0, calibrate: bool = False,
-                 session=None):
+                 session=None, fault_plan: FaultPlan | None = None):
         self.model = model
         self.params = params
         # repro.core.Session owning this engine's schedule/calibration cache
         # state (None → the process-wide default session, so engines share
         # measured profiles the way the module-global caches used to).
         self.session = session
+        # per-engine injection plan (None → $REPRO_FAULT_PLAN, if armed)
+        self.fault_plan = fault_plan
+        # watchdog latch: once the jitted decode step fails, every later
+        # tick runs the eager (uncompiled, sequential-semantics) step —
+        # slower, but the batch keeps draining
+        self._use_compiled = True
+        self.fault_stats = {"decode_faults": 0, "failed_requests": 0,
+                            "watchdog_fallbacks": 0}
         self.cfg: ModelConfig = model.cfg
         self.max_slots = max_slots
         self.max_len = max_len
@@ -135,16 +162,19 @@ class InferenceEngine:
         # needs a payload.  Dense and MoE exports (routed ragged fan-out)
         # are fully payload-backed; cost-only operators without shapes
         # (hybrid mamba, rwkv scan) cannot be bound as profiling inputs —
-        # fail with a diagnosis instead of a shape error.
+        # degrade to the analytic cost model (one structured warning +
+        # ``cache_stats()["calib_degraded_analytic"]``) instead of failing
+        # the serve launch with a shape error.
         unbindable = [n.name for n in g
                       if n.fn is None and n.out_shape is None]
         if unbindable:
-            raise ValueError(
-                f"calibrate_schedule: {self.cfg.name!r} exports "
-                f"{len(unbindable)} cost-only operators without payloads "
-                f"(e.g. {unbindable[0]!r}) — measured calibration needs a "
-                "fully payload-backed graph (dense architectures); use "
-                "Session.plan() for an analytic schedule instead")
+            sess.note_degradation(
+                "calibration_measure", "measured->analytic",
+                f"{self.cfg.name!r} exports {len(unbindable)} cost-only "
+                f"operators without payloads (e.g. {unbindable[0]!r}); "
+                "scheduling on analytic costs")
+            self.schedule_plan = sess.plan(g)
+            return self.schedule_plan
         inputs = {n.op_id: jnp.zeros(n.out_shape, jnp.int32)
                   for n in g if n.fn is None}
         sess.calibrate(g, inputs, repeats=repeats)
@@ -170,12 +200,29 @@ class InferenceEngine:
             return self._admit(free[0], self.queue.pop(0))
         return self._decode_tick()
 
+    def _fail(self, req: Request, reason: str) -> Request:
+        """Terminal eviction of ONE poisoned request; co-batched requests
+        are untouched (their slots, caches and positions stay live)."""
+        req.state = RequestState.FAILED
+        req.error = reason
+        self.fault_stats["failed_requests"] += 1
+        return req
+
     def _admit(self, slot: int, req: Request) -> list[Request]:
         req.state = RequestState.RUNNING
+        if not req.prompt:
+            return [self._fail(req, "empty prompt")]
         tokens = jnp.asarray([req.prompt], jnp.int32)
-        logits, cache = self.model.prefill(
-            self.params, {"tokens": tokens},
-            cache_len=self.max_len + self.cfg.meta_tokens)
+        try:
+            logits, cache = self.model.prefill(
+                self.params, {"tokens": tokens},
+                cache_len=self.max_len + self.cfg.meta_tokens)
+        except Exception as exc:
+            # a poisoned prompt must not take the engine down — the queue
+            # keeps draining and the decode batch never saw this request
+            return [self._fail(req, f"prefill failed: {exc!r}")]
+        if not bool(np.isfinite(np.asarray(logits)).all()):
+            return [self._fail(req, "prefill produced non-finite logits")]
         self.rng, sub = jax.random.split(self.rng)
         first = int(sample_token(logits, sub, req.temperature)[0])
         req.output.append(first)
@@ -197,11 +244,64 @@ class InferenceEngine:
             return []
         token = jnp.asarray(self.last_token)
         pos = jnp.asarray(self.pos)
-        logits, self.caches = self._decode(self.params, self.caches, token, pos)
+        logits = None
+        faults = (self.fault_plan if self.fault_plan is not None
+                  else _active_faults())
+        if self._use_compiled:
+            try:
+                logits, caches = self._decode(self.params, self.caches,
+                                              token, pos)
+                if faults is not None:
+                    # raise mode → watchdog; corrupt mode → one poisoned
+                    # slot (NaN row), caught per-slot below.  Fired only on
+                    # the compiled path so the eager rescue never re-injects.
+                    logits = faults.fire("decode_step", payload=logits)
+                self.caches = caches
+            except Exception as exc:
+                # step watchdog: latch onto the eager (uncompiled) step for
+                # the rest of this engine's life — the batch keeps draining
+                self.fault_stats["decode_faults"] += 1
+                self.fault_stats["watchdog_fallbacks"] += 1
+                self._use_compiled = False
+                warnings.warn(
+                    f"decode watchdog: jitted step failed ({exc!r}); "
+                    "falling back to the eager decode step",
+                    DegradationWarning, stacklevel=2)
+                if self.session is not None:
+                    self.session.note_degradation(
+                        "decode_step", "jitted->eager", repr(exc), warn=False)
+                logits = None
+        if logits is None:
+            try:
+                logits, self.caches = self.model.decode(
+                    self.params, token, self.caches, pos)
+            except Exception as exc:
+                # both rungs failed: fail the co-batch explicitly rather
+                # than crash mid-tick with slots in limbo
+                failed = []
+                for i in active:
+                    req = self.slots[i]
+                    self.slots[i] = None
+                    self.pos[i] = 0
+                    self.last_token[i] = 0
+                    failed.append(self._fail(
+                        req, f"decode failed on both rungs: {exc!r}"))
+                return failed
+        finite_rows = np.isfinite(np.asarray(logits)).all(axis=-1)
         self.rng, sub = jax.random.split(self.rng)
         finished: list[Request] = []
         for i in active:
             req = self.slots[i]
+            if not bool(finite_rows[i]):
+                # poisoned request: evict THIS slot only; the other slots'
+                # logits and cache rows are intact and keep decoding
+                self.fault_stats["decode_faults"] += 1
+                finished.append(self._fail(
+                    req, "decode produced non-finite logits"))
+                self.slots[i] = None
+                self.pos[i] = 0
+                self.last_token[i] = 0
+                continue
             t = int(sample_token(logits[i:i + 1], jax.random.fold_in(sub, i),
                                  req.temperature)[0])
             req.output.append(t)

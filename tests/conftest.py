@@ -26,10 +26,14 @@ def _fresh_default_session(tmp_path, monkeypatch):
       ``repro.core.api`` shims) is replaced with a fresh one — empty
       plan/exec/calib caches, zeroed counters — before AND after each test,
       so no test needs ad-hoc ``clear_caches()`` bracketing and no test can
-      leak warm cache entries into the next."""
+      leak warm cache entries into the next;
+    * ``$REPRO_FAULT_PLAN`` is cleared — a chaos run (scripts/chaos_smoke.py)
+      arms it per-invocation, but the regular suite must always see the
+      fault-free path unless a test arms a plan explicitly."""
     from repro.core.session import reset_default_session
 
     monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
     reset_default_session()
     yield
     reset_default_session()

@@ -114,6 +114,31 @@ def test_gate_makespan_only_ignores_wallclock(tmp_path):
     assert "makespan_us" in r.stdout
 
 
+def test_gate_multi_run_intersection(tmp_path):
+    """With several --new run dirs, only regressions confirmed in EVERY run
+    fail — noise flags a different metric per run, a real slowdown repeats."""
+    _write(tmp_path / "old", SCHED_OK, INFER_OK)
+    # run 1: scheduler bert regresses; run 2: it does not (noise) -> clean
+    bad = json.loads(json.dumps(SCHED_OK))
+    bad["workloads"][0]["schedule_ms"] = 13.0
+    _write(tmp_path / "r1", bad, INFER_OK)
+    _write(tmp_path / "r2", SCHED_OK, INFER_OK)
+    r = _run(tmp_path / "old", tmp_path / "r1", str(tmp_path / "r2"))
+    assert r.returncode == 0, r.stdout + r.stderr
+    # the same metric regressed in both runs -> confirmed, gate fails
+    _write(tmp_path / "r2", bad, INFER_OK)
+    r = _run(tmp_path / "old", tmp_path / "r1", str(tmp_path / "r2"))
+    assert r.returncode == 1
+    assert "REGRESSION bert schedule_ms" in r.stdout
+    # same workload name regressing in DIFFERENT files must not conflate:
+    # scheduler-bert in run 1, inference-bert in run 2 -> no intersection
+    bad_inf = json.loads(json.dumps(INFER_OK))
+    bad_inf["workloads"][0]["schedule_ms"] = 16.0
+    _write(tmp_path / "r2", SCHED_OK, bad_inf)
+    r = _run(tmp_path / "old", tmp_path / "r1", str(tmp_path / "r2"))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
 def test_gate_errors_without_baseline(tmp_path):
     _write(tmp_path / "new", SCHED_OK, INFER_OK)
     r = _run(tmp_path / "empty", tmp_path / "new")

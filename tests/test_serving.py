@@ -107,16 +107,30 @@ def test_engine_without_session_uses_default(small_model):
     assert default_session().cache_stats()["calib_hits"] >= 1
 
 
-def test_calibrate_schedule_rejects_partially_payloaded_arch():
+def test_calibrate_schedule_degrades_partially_payloaded_arch():
     """Exports with cost-only operators (hybrid mamba, rwkv scan — builders
-    that don't thread params yet) — measured calibration must fail with a
-    diagnosis, not a shape error deep in the profiler."""
+    that don't thread params yet) can't be measured — calibrate_schedule
+    degrades to the analytic cost model with ONE structured warning and a
+    counted provenance record, instead of failing the serve launch."""
+    from repro.core import Session
+    from repro.runtime import DegradationWarning
+
     cfg = get_config("rwkv6-1.6b", smoke=True)
     model = make_model(cfg)
     params = model.init(jax.random.key(0))
-    engine = InferenceEngine(model, params, max_slots=2, max_len=32)
-    with pytest.raises(ValueError, match="cost-only operators"):
-        engine.calibrate_schedule(n_layers=2)
+    sess = Session()
+    engine = InferenceEngine(model, params, max_slots=2, max_len=32,
+                             session=sess)
+    with pytest.warns(DegradationWarning, match="cost-only"):
+        plan = engine.calibrate_schedule(n_layers=2)
+    assert plan is engine.schedule_plan
+    assert plan.n_streams >= 1                  # analytic schedule exists
+    stats = sess.cache_stats()
+    assert stats["calib_degraded_analytic"] == 1
+    assert stats["calib_misses"] == 0           # measurement never attempted
+    events = sess.guard_log.as_dicts()
+    assert [e["site"] for e in events] == ["calibration_measure"]
+    assert events[0]["action"] == "measured->analytic"
 
 
 def test_calibrate_schedule_works_on_routed_moe():
