@@ -60,12 +60,15 @@ def run(batch: int = 1) -> list[str]:
     # uneven-branch case, gated alongside the uniform kimi topology
     graphs["kimi-moe-ragged"] = moe_ragged_workload(batch=batch)
     # one autotuning session for the whole sweep — each workload's search
-    # runs once and lands in the session's plan cache (the serving pattern)
-    tune_sess = Session(hw=BENCH_HW, sim_cfg=BENCH_SIM, autotune=True)
+    # (static sweep + iterative refinement) runs once and lands in the
+    # session's plan cache (the serving pattern)
+    tune_sess = Session(hw=BENCH_HW, sim_cfg=BENCH_SIM, autotune=True,
+                        refine=True)
     for name, g in graphs.items():
         tuned = tune_sess.plan(g)
+        tuned_meta: dict[str, str] = {}
         res = compare_policies(g, hw=BENCH_HW, cfg=BENCH_SIM,
-                               opara_plan=tuned)
+                               opara_plan=tuned, tuned_meta=tuned_meta)
         base = res["cuda_graph_sequential"]["makespan_us"]
         t_sched, plan = _time_best(
             lambda: schedule(g, "opara", "opara", hw=BENCH_HW,
@@ -85,8 +88,13 @@ def run(batch: int = 1) -> list[str]:
                    {k: round(tuned_stats[k], 4) for k in eff_keys},
                    autotune_ms=round(tuned.autotune_ms, 3),
                    n_candidates=tuned.n_candidates,
-                   alloc=tuned.alloc_policy, order=tuned.order_policy,
+                   alloc=tuned_meta.get("tuned_alloc", tuned.alloc_policy),
+                   order=tuned_meta.get("tuned_order", tuned.order_policy),
                    repacked=bool(tuned.repacked),
+                   refined=bool(tuned.refined),
+                   refine_ms=round(tuned.refine_ms, 3),
+                   refine_iters=tuned.refine_iters,
+                   refine_delta_us=round(tuned.refine_delta_us, 3),
                    est_makespan_us=round(tuned.est_makespan_us or 0.0, 2)),
                "untuned": {k: round(untuned_stats[k], 4) for k in eff_keys},
                "policies": {}}

@@ -85,6 +85,17 @@ def run() -> list[str]:
         for _ in range(3))
     t_tune = min(_timed(lambda: autotune(big, cfg=BENCH_SIM))
                  for _ in range(3))
+    # the IOS-style iterative refinement pass on top of the static sweep:
+    # cold wall time and the (deterministic) predicted-makespan trajectory
+    # static sweep → refined plan
+    t_refine, p_refined = float("inf"), None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        cand = autotune(big, cfg=BENCH_SIM, refine=True)
+        t_ms = (time.perf_counter() - t0) * 1e3
+        if t_ms < t_refine:
+            t_refine, p_refined = t_ms, cand
+    p_static = autotune(big, cfg=BENCH_SIM)
     tune_sess = Session(autotune=True, sim_cfg=BENCH_SIM)
     tune_sess.plan(big)                        # miss: tunes once
     t_tune_hit = min(_timed(lambda: tune_sess.plan(big)) for _ in range(3))
@@ -92,6 +103,9 @@ def run() -> list[str]:
     rows.append(f"big_graph_estimate,{t_est:.3f}")
     rows.append(f"big_graph_estimate_speedup,{t_sim / max(t_est, 1e-9):.1f}")
     rows.append(f"big_graph_autotune_cold,{t_tune:.2f}")
+    rows.append(f"big_graph_autotune_refine_cold,{t_refine:.2f}")
+    rows.append(f"big_graph_est_static,{p_static.est_makespan_us:.3f}")
+    rows.append(f"big_graph_est_refined,{p_refined.est_makespan_us:.3f}")
     rows.append(f"big_graph_autotune_plan_hit,{t_tune_hit:.4f}")
     RECORDS.append({
         "workload": "bert-180L", "n_ops": len(big),
@@ -104,6 +118,16 @@ def run() -> list[str]:
         "autotune_cold_ms": round(t_tune, 3),
         "autotune_vs_schedule": round(t_tune / max(t_sched, 1e-9), 2),
         "autotune_plan_hit_ms": round(t_tune_hit, 5),
+        # refinement acceptance: est_static/est_refined are deterministic
+        # cost-model values (gate-stable); the wall times are best-of-3
+        "autotune_refine_cold_ms": round(t_refine, 3),
+        "refine_vs_schedule": round(t_refine / max(t_sched, 1e-9), 2),
+        "refine_ms": round(p_refined.refine_ms, 3),
+        "refine_iters": p_refined.refine_iters,
+        "est_static_us": round(p_static.est_makespan_us, 3),
+        "est_refined_us": round(p_refined.est_makespan_us, 3),
+        "repacked": bool(p_refined.repacked),
+        "refined": bool(p_refined.refined),
     })
     return rows
 

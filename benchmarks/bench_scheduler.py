@@ -13,7 +13,7 @@ import time
 
 import jax.numpy as jnp
 
-from repro.core import Session, schedule
+from repro.core import Session, autotune, schedule
 
 from repro.core.nimble import allocate_streams_nimble
 from repro.core.stream_alloc import allocate_streams
@@ -58,7 +58,33 @@ def run() -> list[str]:
             "schedule_ms": round(t_sched, 4),
             "plan_cache_hit_ms": round(t_hit, 5),
         })
+    rows.extend(_refine_trajectory(graphs))
     rows.extend(_measured_calibration())
+    return rows
+
+
+def _refine_trajectory(graphs: dict) -> list[str]:
+    """Static autotune sweep vs sweep+iterative refinement: the predicted
+    makespan each returns (deterministic cost-model values) plus the
+    refinement pass's wall time and accepted-move count."""
+    from .bench_inference import BENCH_SIM
+    rows = ["", "autotune refinement,workload,est_static_us,est_refined_us,"
+                "refine_ms,refine_iters,refined"]
+    for name in ("inception-v3", "kimi-moe-ragged (4L)"):
+        g = graphs[name]
+        p_static = autotune(g, cfg=BENCH_SIM)
+        p_ref = autotune(g, cfg=BENCH_SIM, refine=True)
+        rows.append(f"refine,{name},{p_static.est_makespan_us:.3f},"
+                    f"{p_ref.est_makespan_us:.3f},{p_ref.refine_ms:.2f},"
+                    f"{p_ref.refine_iters},{p_ref.refined}")
+        RECORDS.append({
+            "workload": f"{name} (autotune+refine)", "n_ops": len(g),
+            "est_static_us": round(p_static.est_makespan_us, 3),
+            "est_refined_us": round(p_ref.est_makespan_us, 3),
+            "refine_ms": round(p_ref.refine_ms, 3),
+            "refine_iters": p_ref.refine_iters,
+            "refined": bool(p_ref.refined),
+        })
     return rows
 
 

@@ -14,9 +14,17 @@ reproduces in each; a scheduler phase flags a different set per run.
     python scripts/check_bench_regression.py --old . --new /tmp/b1 /tmp/b2
 
 Watched metrics (matched per workload name, missing entries skipped):
-  BENCH_scheduler.json  workloads[].schedule_ms, overhead[].schedule_ms
+  BENCH_scheduler.json  workloads[].schedule_ms, overhead[].schedule_ms,
+                        overhead[].est_static_us / est_refined_us
+                        (deterministic: no envelope, gated even under
+                        --makespan-only)
   BENCH_inference.json  workloads[].schedule_ms,
-                        workloads[].policies[*].makespan_us
+                        workloads[].policies[*].makespan_us,
+                        workloads[].autotune.est_makespan_us
+                        (deterministic: no envelope)
+
+Non-numeric record fields (policy-name strings, repacked/refined flags)
+are skipped explicitly — only int/float metrics enter the comparison.
 
 A metric regresses when ``new > old * (1 + threshold)`` AND the absolute
 slowdown exceeds a noise floor (wall-clock ms jitter on loaded CI boxes;
@@ -33,6 +41,8 @@ import sys
 # (relative threshold is the CLI flag; these are per-unit noise floors)
 MS_FLOOR = 0.5     # wall-clock timings below this delta are jitter
 US_FLOOR = 1.0     # simulated makespan (deterministic, tiny floor)
+EST_FLOOR = 0.01   # cost-model estimates are bit-deterministic: anything
+                   # above JSON rounding (2 decimals) is a real regression
 
 
 def _load(path: str) -> dict:
@@ -51,7 +61,14 @@ def _by_workload(records: list[dict]) -> dict[str, dict]:
 
 def _check(name: str, metric: str, old: float, new: float,
            threshold: float, floor: float) -> str | None:
-    if old is None or new is None or old <= 0:
+    # Explicitly numeric-only: trajectory records carry string provenance
+    # (e.g. tuned policy names) next to the gated metrics, and a bool is
+    # a flag, not a timing — neither may reach the arithmetic below.
+    if not isinstance(old, (int, float)) or isinstance(old, bool):
+        return None
+    if not isinstance(new, (int, float)) or isinstance(new, bool):
+        return None
+    if old <= 0:
         return None
     if new > old * (1.0 + threshold) and (new - old) > floor:
         return (f"REGRESSION {name} {metric}: "
@@ -61,8 +78,9 @@ def _check(name: str, metric: str, old: float, new: float,
 
 def compare_records(old_records: list[dict], new_records: list[dict],
                     metrics_ms: list[str], threshold: float,
-                    tag: str = "") -> list[tuple[str, str]]:
-    """Per-workload ms-metric comparison; returns (key, message) pairs.
+                    tag: str = "",
+                    floor: float = MS_FLOOR) -> list[tuple[str, str]]:
+    """Per-workload metric comparison; returns (key, message) pairs.
 
     ``key`` identifies the metric across runs (``tag`` disambiguates the
     same workload name appearing in several trajectory files) so multi-run
@@ -75,7 +93,7 @@ def compare_records(old_records: list[dict], new_records: list[dict],
             continue
         for m in metrics_ms:
             msg = _check(name, m, old_rec.get(m), new_rec.get(m),
-                         threshold, MS_FLOOR)
+                         threshold, floor)
             if msg:
                 out.append((f"{tag}:{name}:{m}", msg))
     return out
@@ -100,15 +118,25 @@ def compare_inference(old: dict, new: dict, threshold: float,
                          threshold, US_FLOOR)
             if msg:
                 out.append((f"makespan:{name}:{policy}", msg))
+        # The autotuned row's predicted makespan is bit-deterministic (pure
+        # cost-model arithmetic), so it is gated with NO relative envelope:
+        # a search change that returns a worse schedule fails the gate even
+        # when the simulated makespans above stay inside their thresholds.
+        msg = _check(f"{name}/autotune", "est_makespan_us",
+                     (old_rec.get("autotune") or {}).get("est_makespan_us"),
+                     (new_rec.get("autotune") or {}).get("est_makespan_us"),
+                     0.0, EST_FLOOR)
+        if msg:
+            out.append((f"est:{name}:autotune", msg))
     return out
 
 
 def compare_dirs(old_dir: str, new_dir: str, threshold: float,
                  makespan_only: bool = False) -> list[tuple[str, str]]:
     regressions: list[tuple[str, str]] = []
+    old_s = _load(os.path.join(old_dir, "BENCH_scheduler.json"))
+    new_s = _load(os.path.join(new_dir, "BENCH_scheduler.json"))
     if not makespan_only:
-        old_s = _load(os.path.join(old_dir, "BENCH_scheduler.json"))
-        new_s = _load(os.path.join(new_dir, "BENCH_scheduler.json"))
         regressions += compare_records(old_s.get("workloads", []),
                                        new_s.get("workloads", []),
                                        ["schedule_ms"], threshold,
@@ -117,6 +145,15 @@ def compare_dirs(old_dir: str, new_dir: str, threshold: float,
                                        new_s.get("overhead", []),
                                        ["schedule_ms"], threshold,
                                        tag="overhead")
+    # predicted-makespan trajectory of the autotune+refine pass on the big
+    # graph: deterministic cost-model output, gated with no envelope (and
+    # under --makespan-only too — it is machine-independent)
+    for section, tag in (("overhead", "overhead-est"),
+                         ("workloads", "scheduler-est")):
+        regressions += compare_records(old_s.get(section, []),
+                                       new_s.get(section, []),
+                                       ["est_static_us", "est_refined_us"],
+                                       0.0, tag=tag, floor=EST_FLOOR)
     old_i = _load(os.path.join(old_dir, "BENCH_inference.json"))
     new_i = _load(os.path.join(new_dir, "BENCH_inference.json"))
     regressions += compare_inference(old_i, new_i, threshold, makespan_only)

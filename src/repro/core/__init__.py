@@ -19,7 +19,14 @@ from .launch_order import (
     resource_only_order,
     topo_order,
 )
-from .fusion import Wave, WaveSchedule, build_waves, fusion_stats, repack_waves
+from .fusion import (
+    Wave,
+    WaveSchedule,
+    build_waves,
+    fusion_stats,
+    regroup_waves,
+    repack_waves,
+)
 from .simulator import (
     SimConfig,
     SimResult,
@@ -30,11 +37,13 @@ from .simulator import (
 from .capture import CapturedGraph, Step, capture, run_sequential_uncompiled
 from .scheduler import (
     ALLOC_POLICIES,
+    RefineConfig,
     SchedulePlan,
     autotune,
     compare_policies,
     compile_plan,
     estimate_plan,
+    refine,
     schedule,
     simulate_plan,
 )
@@ -62,12 +71,14 @@ __all__ = [
     "StreamPlan", "allocate_streams", "count_syncs", "allocate_streams_nimble",
     "ORDER_POLICIES", "critical_path_order", "depth_first_order",
     "opara_launch_order", "resource_only_order", "topo_order",
-    "Wave", "WaveSchedule", "build_waves", "fusion_stats", "repack_waves",
+    "Wave", "WaveSchedule", "build_waves", "fusion_stats", "regroup_waves",
+    "repack_waves",
     "SimConfig", "SimResult", "estimate_makespan", "sequential_makespan",
     "simulate",
     "CapturedGraph", "Step", "capture", "run_sequential_uncompiled",
-    "ALLOC_POLICIES", "SchedulePlan", "autotune", "compare_policies",
-    "compile_plan", "estimate_plan", "schedule", "simulate_plan",
+    "ALLOC_POLICIES", "RefineConfig", "SchedulePlan", "autotune",
+    "compare_policies", "compile_plan", "estimate_plan", "refine",
+    "schedule", "simulate_plan",
     "CompiledModel", "Session", "SessionConfig", "default_session",
     "reset_default_session",
     "cache_stats", "calibrate", "calibration_key", "clear_caches",

@@ -65,7 +65,9 @@ from .profiler import (
 )
 from .scheduler import (
     ALLOC_POLICIES,
+    RefineConfig,
     SchedulePlan,
+    _normalize_refine,
     compile_plan,
     schedule,
 )
@@ -108,6 +110,8 @@ class SessionConfig:
     order_policy: str = "opara"
     max_lanes: int | None = None
     autotune: bool = False                # simulator-guided {alloc}×{order}×{repack}
+    refine: bool | RefineConfig = False   # IOS-style iterative refinement of
+                                          # the autotune winner (needs autotune)
     sim_cfg: SimConfig | None = None      # cost model for autotune / repack
     # -- capture / executable ----------------------------------------------
     gemm_kernel: str = "auto"             # auto | pallas | vmap
@@ -143,6 +147,10 @@ class SessionConfig:
             raise ValueError("calib_retries must be >= 0")
         if self.calib_backoff_s < 0:
             raise ValueError("calib_backoff_s must be >= 0")
+        # raises TypeError on junk values; None means refinement is off
+        if _normalize_refine(self.refine) is not None and not self.autotune:
+            raise ValueError("refine requires autotune=True (refinement "
+                             "starts from the autotune winner)")
 
 
 # =========================================================================
@@ -234,8 +242,13 @@ def _policy_parts(cfg: SessionConfig) -> tuple[str, str, SimConfig | None]:
 
 def _plan_key(graph: OpGraph, cfg: SessionConfig) -> tuple:
     alloc, order, sim_cfg = _policy_parts(cfg)
+    # Refinement changes the plan an autotune search returns, so the
+    # normalized RefineConfig (frozen + hashable; ``True`` and an explicit
+    # default config normalize identically) joins the key.  Off — or
+    # single-policy scheduling, which never refines — contributes ``None``.
+    refine = _normalize_refine(cfg.refine) if cfg.autotune else None
     return graph_signature(graph, alloc, order, cfg.hw,
-                           cfg.max_lanes, sim_cfg)
+                           cfg.max_lanes, sim_cfg) + (refine,)
 
 
 # =========================================================================
@@ -393,6 +406,7 @@ class CompiledModel:
                 "alloc_policy": p.alloc_policy,   # tuned value under autotune
                 "order_policy": p.order_policy,
                 "autotune": cfg.autotune,
+                "refine": _normalize_refine(cfg.refine) is not None,
                 "gemm_kernel": cfg.gemm_kernel,
                 "weights_key": cfg.weights_key,
             },
@@ -410,11 +424,15 @@ class CompiledModel:
                 profile=p.profile_time_ms,
                 waves=p.wave_time_ms,
                 autotune=p.autotune_ms,
+                refine=p.refine_ms,
             ),
             "schedule": {
                 "n_streams": p.n_streams,
                 "n_waves": p.waves.n_waves,
                 "repacked": p.repacked,
+                "refined": p.refined,
+                "refine_iters": p.refine_iters,
+                "refine_delta_us": p.refine_delta_us,
                 "est_makespan_us": p.est_makespan_us,
             },
         }
@@ -584,7 +602,8 @@ class Session:
             if cfg.autotune:
                 return autotune_schedule(
                     graph, hw=cfg.hw, cfg=sim_cfg, max_lanes=cfg.max_lanes,
-                    measured_inputs=measured_inputs), "uncached"
+                    measured_inputs=measured_inputs,
+                    refine=cfg.refine), "uncached"
             return schedule(
                 graph, alloc, order, cfg.hw, max_lanes=cfg.max_lanes,
                 measured_inputs=measured_inputs, sim_cfg=sim_cfg), "uncached"
@@ -603,7 +622,7 @@ class Session:
         # the plain pipeline schedules with them — no re-timing here.
         if cfg.autotune:
             p = autotune_schedule(graph, hw=cfg.hw, cfg=sim_cfg,
-                                  max_lanes=cfg.max_lanes)
+                                  max_lanes=cfg.max_lanes, refine=cfg.refine)
         else:
             p = schedule(graph, alloc, order, cfg.hw,
                          max_lanes=cfg.max_lanes, sim_cfg=sim_cfg)

@@ -61,7 +61,7 @@ def simulate(
     plan: StreamPlan,
     order: list[int],
     profiles: dict[int, OpProfile],
-    cfg: SimConfig = SimConfig(),
+    cfg: SimConfig | None = None,
 ) -> SimResult:
     """Event-driven simulation.
 
@@ -73,6 +73,7 @@ def simulate(
     the penalty if any same-class op overlaps (conservative, matches the
     paper's pairwise measurements).
     """
+    cfg = cfg or SimConfig()
     pos_in_order = {op: k for k, op in enumerate(order)}
     stream_queues: dict[int, list[int]] = {}
     for op in order:
@@ -194,7 +195,7 @@ def estimate_makespan(
     plan: StreamPlan,
     order: list[int],
     profiles: dict[int, OpProfile],
-    cfg: SimConfig = SimConfig(),
+    cfg: SimConfig | None = None,
 ) -> float:
     """Fast-path cost model: one monotone sweep over the launch order.
 
@@ -213,7 +214,7 @@ def estimate_makespan(
     per event, so it is an *estimate* — accurate enough to rank candidate
     schedules, which is all the autotuner needs.
     """
-    return _sweep(op_tables(graph, plan, profiles), order, cfg)
+    return _sweep(op_tables(graph, plan, profiles), order, cfg or SimConfig())
 
 
 def op_tables(
@@ -241,8 +242,75 @@ def op_tables(
     return stream, demand, est, is_comp, inputs
 
 
-def _sweep(tables: tuple, order: list[int], cfg: SimConfig) -> float:
-    stream, demand, est, is_comp, inputs = tables
+class SweepState:
+    """Resumable :func:`_sweep` state — the delta re-estimation primitive.
+
+    The sweep places ops strictly in launch-order sequence, so its state
+    after a prefix is a pure function of that prefix.  ``scheduler.refine``
+    exploits this: it checkpoints (``clone``) the state at wave boundaries
+    and re-estimates a perturbed schedule by re-sweeping only the suffix
+    behind the edit (``sweep_extend``) instead of the whole order.
+    """
+
+    __slots__ = ("end", "stream_free", "active", "used", "n_comp", "n_mem",
+                 "last_start", "makespan")
+
+    def __init__(self, n_ops: int):
+        self.end = [0.0] * n_ops
+        self.stream_free: dict[int, float] = {}
+        # running set: min-heap of (end_t, op, demand, is_comp) + aggregates
+        self.active: list[tuple[float, int, float, bool]] = []
+        self.used = 0.0
+        self.n_comp = 0
+        self.n_mem = 0
+        self.last_start = 0.0
+        self.makespan = 0.0
+
+    def clone(self) -> "SweepState":
+        s = SweepState.__new__(SweepState)
+        s.end = self.end.copy()
+        s.stream_free = dict(self.stream_free)
+        s.active = list(self.active)   # a copied heap keeps its invariant
+        s.used = self.used
+        s.n_comp = self.n_comp
+        s.n_mem = self.n_mem
+        s.last_start = self.last_start
+        s.makespan = self.makespan
+        return s
+
+    def fork(self) -> "SweepState":
+        """Like :meth:`clone` but SHARING the per-op ``end`` array.
+
+        Valid because the sweep only reads ``end[p]`` for producers ``p``
+        of the op being placed — which a dependency-valid order has already
+        placed *in the same walk* or before the fork point — so entries at
+        or beyond the fork point are always rewritten before they are read.
+        Forks from one base state may interleave freely under that rule;
+        ``clone`` (which copies) is the safe choice when in doubt.  This is
+        what makes a refinement candidate's suffix re-estimate O(suffix)
+        instead of O(n) per evaluation.
+        """
+        s = SweepState.__new__(SweepState)
+        s.end = self.end                # shared, write-before-read
+        s.stream_free = dict(self.stream_free)
+        s.active = list(self.active)
+        s.used = self.used
+        s.n_comp = self.n_comp
+        s.n_mem = self.n_mem
+        s.last_start = self.last_start
+        s.makespan = self.makespan
+        return s
+
+
+def sweep_extend(tables: tuple, ops, cfg: SimConfig,
+                 state: SweepState) -> float:
+    """Place ``ops`` (the next slice of a launch order) onto ``state``.
+
+    Mutates ``state`` and returns the running makespan.  Chaining
+    ``sweep_extend`` calls over consecutive slices of an order is exactly
+    equivalent to one :func:`_sweep` over the whole order; every op's
+    producers must have been placed by an earlier slice (or this one).
+    """
     sync = cfg.sync_us
     launch = 0.0 if cfg.graph_capture else cfg.launch_us
     cap = cfg.resource_cap
@@ -250,17 +318,17 @@ def _sweep(tables: tuple, order: list[int], cfg: SimConfig) -> float:
     head_of_line = cfg.head_of_line
     heappush, heappop = heapq.heappush, heapq.heappop
 
-    n = len(stream)
-    end = [0.0] * n
-    stream_free: dict[int, float] = {}
-    # running set: min-heap of (end_t, op, demand, is_comp) + live aggregates
-    active: list[tuple[float, int, float, bool]] = []
-    used = 0.0
-    n_comp = n_mem = 0
-    last_start = 0.0
-    makespan = 0.0
+    stream, demand, est, is_comp, inputs = tables
+    end = state.end
+    stream_free = state.stream_free
+    active = state.active
+    used = state.used
+    n_comp = state.n_comp
+    n_mem = state.n_mem
+    last_start = state.last_start
+    makespan = state.makespan
 
-    for op in order:
+    for op in ops:
         s = stream[op]
         t0 = stream_free.get(s, 0.0)
         for p in inputs[op]:    # duplicate edges: same max, no dedup cost
@@ -310,13 +378,25 @@ def _sweep(tables: tuple, order: list[int], cfg: SimConfig) -> float:
             n_mem += 1
         if t1 > makespan:
             makespan = t1
+
+    state.used = used
+    state.n_comp = n_comp
+    state.n_mem = n_mem
+    state.last_start = last_start
+    state.makespan = makespan
     return makespan
 
 
+def _sweep(tables: tuple, order: list[int], cfg: SimConfig) -> float:
+    return sweep_extend(tables, order, cfg, SweepState(len(tables[0])))
+
+
 def sequential_makespan(
-    graph: OpGraph, profiles: dict[int, OpProfile], cfg: SimConfig = SimConfig()
+    graph: OpGraph, profiles: dict[int, OpProfile],
+    cfg: SimConfig | None = None,
 ) -> float:
     """T_seq of the paper — one stream, topological order."""
+    cfg = cfg or SimConfig()
     total = sum(profiles[i].est_us for i in graph.nodes)
     if not cfg.graph_capture:
         total += cfg.launch_us * len(graph)

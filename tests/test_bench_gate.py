@@ -143,3 +143,59 @@ def test_gate_errors_without_baseline(tmp_path):
     _write(tmp_path / "new", SCHED_OK, INFER_OK)
     r = _run(tmp_path / "empty", tmp_path / "new")
     assert r.returncode == 2
+
+
+def test_gate_skips_non_numeric_fields(tmp_path):
+    """Trajectory records carry string provenance (tuned policy names) and
+    bool flags next to gated metrics — the gate must skip them explicitly,
+    not crash or compare them."""
+    doc = {"workloads": [{
+        "workload": "bert", "schedule_ms": "not-a-number",
+        "policies": {"opara": {"makespan_us": True}},
+        "autotune": {"est_makespan_us": "opara"}}]}
+    worse = {"workloads": [{
+        "workload": "bert", "schedule_ms": "even-worse",
+        "policies": {"opara": {"makespan_us": False}},
+        "autotune": {"est_makespan_us": "topo"}}]}
+    _write(tmp_path / "old", SCHED_OK, doc)
+    _write(tmp_path / "new", SCHED_OK, worse)
+    r = _run(tmp_path / "old", tmp_path / "new")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_gate_autotune_est_makespan_no_envelope(tmp_path):
+    """The autotuned row's predicted makespan is deterministic: a regression
+    below the 20% wall-clock threshold still fails the gate, and it is
+    gated under --makespan-only too."""
+    old = json.loads(json.dumps(INFER_OK))
+    old["workloads"][0]["autotune"] = {"est_makespan_us": 500.0}
+    new = json.loads(json.dumps(INFER_OK))
+    new["workloads"][0]["autotune"] = {"est_makespan_us": 510.0}  # +2%
+    _write(tmp_path / "old", SCHED_OK, old)
+    _write(tmp_path / "new", SCHED_OK, new)
+    for extra in ((), ("--makespan-only",)):
+        r = _run(tmp_path / "old", tmp_path / "new", *extra)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "bert/autotune est_makespan_us" in r.stdout
+    # improvements and sub-rounding jitter pass
+    new["workloads"][0]["autotune"]["est_makespan_us"] = 500.005
+    _write(tmp_path / "new", SCHED_OK, new)
+    assert _run(tmp_path / "old", tmp_path / "new").returncode == 0
+
+
+def test_gate_refine_est_trajectory_no_envelope(tmp_path):
+    """overhead[] / workloads[] est_static_us / est_refined_us (the
+    autotune+refine trajectory of BENCH_scheduler.json) are gated with no
+    envelope, including under --makespan-only."""
+    old = json.loads(json.dumps(SCHED_OK))
+    old["overhead"][0].update(est_static_us=1433.1, est_refined_us=1432.4)
+    new = json.loads(json.dumps(old))
+    new["overhead"][0]["est_refined_us"] = 1433.0   # +0.04%: still fails
+    _write(tmp_path / "old", old, INFER_OK)
+    _write(tmp_path / "new", new, INFER_OK)
+    for extra in ((), ("--makespan-only",)):
+        r = _run(tmp_path / "old", tmp_path / "new", *extra)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "est_refined_us" in r.stdout
+    _write(tmp_path / "new", old, INFER_OK)
+    assert _run(tmp_path / "old", tmp_path / "new").returncode == 0

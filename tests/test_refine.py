@@ -1,0 +1,350 @@
+"""IOS-style iterative schedule refinement (``scheduler.refine``) and the
+staged-repack autotune fix.
+
+Pins:
+  (a) the root-cause staging bug — on large graphs (>NIMBLE_ALLOC_OP_LIMIT
+      ops) the repack leg must rank a repacked candidate PER ORDER, so an
+      order that loses the plain sweep but wins after repacking is found
+      (``repacked: true``);
+  (b) ``repack_options=(True,)`` ranks every order instead of falling back
+      to an arbitrary first order;
+  (c) refinement invariants on random DAGs: never worse than the autotune
+      seed, dependency / resource-cap / permutation validity after every
+      accepted move, budget + plateau termination;
+  (d) ``SweepState.fork`` delta re-estimation semantics;
+  (e) session wiring: ``SessionConfig.refine`` validation, plan-cache
+      keying, ``CompiledModel.explain()`` provenance.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import random_dag
+
+from repro.core import (RefineConfig, Session, SessionConfig, autotune,
+                        refine, schedule)
+from repro.core.fusion import repack_waves
+from repro.core.graph import OpCost, OpGraph, OpKind
+from repro.core.launch_order import ORDER_POLICIES, validate_order
+from repro.core.profiler import ModelProfiler, V5E
+from repro.core.scheduler import (ALLOC_POLICIES,
+                                  AUTOTUNE_ORDER_POLICIES_LARGE,
+                                  NIMBLE_ALLOC_OP_LIMIT, _sweep, op_tables)
+from repro.core.simulator import (SimConfig, SweepState, estimate_makespan,
+                                  sweep_extend)
+
+UNIT = OpCost.OCCUPANCY_UNIT
+GAP_SIM = SimConfig(resource_cap=float(UNIT), sync_us=0.5, launch_us=1.0,
+                    head_of_line=True)
+
+
+def _comp_cost(us_scale: float, occ: float) -> OpCost:
+    """Compute-class op: duration scales with ``us_scale``, resource demand
+    is ``occ`` of the occupancy unit (= the test's resource cap)."""
+    return OpCost(flops=us_scale * 1e9, bytes_read=1e3, bytes_written=1e3,
+                  vmem_bytes=1e3, occupancy=occ)
+
+
+def staged_gap_graph(n_hol_units: int = 125, n_tail_units: int = 2,
+                     m_shorts: int = 16) -> OpGraph:
+    """Adversarial >512-op graph where the best REPACKED order is not the
+    best PLAIN order.
+
+    Head-of-line section (repeated ``n_hol_units`` times): a fan-out of
+    {small a, huge b, small c} whose insertion order (a, b, c) blocks c
+    behind b under head-of-line dispatch — the plain topo sweep pays one
+    small-op latency per unit, Alg. 2's demand-ascending order (a, c, b)
+    does not, and the repacker emits identical waves {a,c},{b} for both
+    orders (order-neutral).
+
+    Tail section: one long op carrying the LARGEST demand next to many
+    shorts — demand-ascending order launches the long op last (tail
+    penalty), insertion order launches it first and overlaps it.  The
+    penalty survives repacking because the packer draws in launch-order
+    position within a class.
+
+    Net: topo loses the plain sweep (head-of-line section dominates) but
+    wins the repack leg (head-of-line section neutralized, tail section
+    decides) — exactly the interaction the staged autotune path missed when
+    it repacked only the plain-sweep winner.
+    """
+    g = OpGraph("staged-gap")
+    prev = g.add("src", OpKind.ELEMENTWISE, [], cost=_comp_cost(0.01, 0.01))
+    for u in range(n_hol_units):
+        a = g.add(f"a{u}", OpKind.GEMM, [prev], cost=_comp_cost(0.5, 0.10))
+        b = g.add(f"b{u}", OpKind.GEMM, [prev], cost=_comp_cost(2.0, 0.95))
+        c = g.add(f"c{u}", OpKind.GEMM, [prev], cost=_comp_cost(0.5, 0.11))
+        prev = g.add(f"bar_a{u}", OpKind.ELEMENTWISE, [a, b, c],
+                     cost=_comp_cost(0.01, 0.01))
+    for u in range(n_tail_units):
+        tail = [g.add(f"T{u}", OpKind.GEMM, [prev],
+                      cost=_comp_cost(3.0, 0.46))]
+        tail += [g.add(f"s{u}_{i}", OpKind.GEMM, [prev],
+                       cost=_comp_cost(0.2, 0.45)) for i in range(m_shorts)]
+        prev = g.add(f"bar_b{u}", OpKind.ELEMENTWISE, tail,
+                     cost=_comp_cost(0.01, 0.01))
+    g.validate()
+    return g
+
+
+def _exhaustive_candidates(g, cfg):
+    """{(order_policy, repacked): est} over the large-graph candidate space,
+    computed independently of autotune's staging."""
+    profiles = ModelProfiler(V5E).profile(g)
+    splan = ALLOC_POLICIES["opara"](g)
+    tables = op_tables(g, splan, profiles)
+    ests = {}
+    for op_ in AUTOTUNE_ORDER_POLICIES_LARGE:
+        order = ORDER_POLICIES[op_](g, profiles)
+        ests[(op_, False)] = _sweep(tables, order, cfg)
+        ws = repack_waves(g, splan, order, profiles, cfg=cfg, group=False)
+        ests[(op_, True)] = _sweep(tables, ws.flat_order(), cfg)
+    return ests
+
+
+# =========================================================================
+# (a) staged-repack regression
+# =========================================================================
+
+def test_staged_gap_graph_is_adversarial():
+    """The construction actually exhibits the gap the fix closes: best plain
+    order != best repacked order, and a repacked non-plain-winner is the
+    global optimum."""
+    g = staged_gap_graph()
+    assert len(g) > NIMBLE_ALLOC_OP_LIMIT
+    ests = _exhaustive_candidates(g, GAP_SIM)
+    plain = {k[0]: v for k, v in ests.items() if not k[1]}
+    repacked = {k[0]: v for k, v in ests.items() if k[1]}
+    best_plain = min(plain, key=plain.get)
+    best_repacked = min(repacked, key=repacked.get)
+    assert best_plain != best_repacked
+    assert repacked[best_repacked] < min(plain.values())
+
+
+def test_autotune_finds_repacked_nonwinner_order_on_large_graph():
+    """Regression: the staged path used to repack only the plain-sweep
+    winner, returning ``repacked: false`` (or the winner's inferior repack)
+    whenever a repacked non-winner order was the true optimum."""
+    g = staged_gap_graph()
+    ests = _exhaustive_candidates(g, GAP_SIM)
+    tuned = autotune(g, cfg=GAP_SIM)
+    assert tuned.repacked
+    best_key = min(ests, key=ests.get)
+    assert (tuned.order_policy, tuned.repacked) == best_key
+    assert tuned.est_makespan_us == pytest.approx(ests[best_key])
+    # the est the old staging would have reported (best plain, repacked or
+    # not) is strictly worse
+    plain_winner = min((k for k in ests if not k[1]), key=ests.get)[0]
+    assert tuned.est_makespan_us < ests[(plain_winner, True)]
+    assert tuned.est_makespan_us < ests[(plain_winner, False)]
+
+
+# =========================================================================
+# (b) repack_options=(True,) ranks all orders
+# =========================================================================
+
+def test_repack_only_option_ranks_every_order():
+    g = staged_gap_graph()
+    ests = _exhaustive_candidates(g, GAP_SIM)
+    tuned = autotune(g, cfg=GAP_SIM, repack_options=(True,))
+    repacked = {k[0]: v for k, v in ests.items() if k[1]}
+    assert tuned.repacked
+    assert tuned.est_makespan_us == pytest.approx(min(repacked.values()))
+    assert tuned.order_policy == min(repacked, key=repacked.get)
+
+
+# =========================================================================
+# (c) refinement invariants
+# =========================================================================
+
+def _check_plan_valid(g, plan, cfg):
+    validate_order(g, plan.order)
+    assert plan.waves.flat_order() == plan.order
+    all_ops = [op for w in plan.waves.waves for op in w.op_ids]
+    assert sorted(all_ops) == sorted(n.op_id for n in g)
+    nodes = g.nodes
+    for w in plan.waves.waves:
+        members = set(w.op_ids)
+        # no intra-wave dependency edges
+        for op in w.op_ids:
+            assert not (set(nodes[op].inputs) & members)
+        # wave demand under the cap (singletons exempt, as in the packer)
+        used = sum(plan.profiles[o].cost.resource_demand() for o in w.op_ids)
+        assert used <= cfg.resource_cap * (1 + 1e-9) or len(w.op_ids) == 1
+        # fusion groups partition the wave
+        grouped = [op for grp in w.fusion_groups for op in grp]
+        assert sorted(grouped) == sorted(w.op_ids)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_refine_never_worse_and_valid_on_random_dags(seed):
+    cap = 16e6 if seed % 2 else 48e6
+    cfg = SimConfig(resource_cap=cap, sync_us=0.5, launch_us=1.0,
+                    head_of_line=True)
+    g = random_dag(np.random.default_rng(seed), 120)
+    seeded = autotune(g, cfg=cfg)
+    refined = refine(seeded, cfg=cfg,
+                     refine_cfg=RefineConfig(min_budget=1 << 16))
+    assert refined.est_makespan_us <= seeded.est_makespan_us + 1e-9
+    _check_plan_valid(g, refined, cfg)
+    # the reported est is the cost model's value for the refined order
+    assert refined.est_makespan_us == pytest.approx(
+        estimate_makespan(g, refined.stream_plan, refined.order,
+                          refined.profiles, cfg))
+    # bookkeeping: refined <=> at least one accepted move and a positive delta
+    if refined.refined:
+        assert refined.refine_iters > 0
+        assert refined.refine_delta_us > 0
+        assert refined.est_makespan_us < seeded.est_makespan_us
+    else:
+        assert refined.refine_iters == 0
+        assert refined.order == seeded.order
+
+
+def test_refine_strictly_improves_a_refinable_plan():
+    """On the ragged-MoE fan-out the boundary walk finds real moves — the
+    acceptance-style strict improvement, deterministic under the fixed
+    cost model."""
+    from benchmarks.bench_inference import BENCH_SIM
+    from benchmarks.workloads import moe_ragged_workload
+    g = moe_ragged_workload()
+    seeded = autotune(g, cfg=BENCH_SIM)
+    refined = refine(seeded, cfg=BENCH_SIM)
+    assert refined.refined
+    assert refined.est_makespan_us < seeded.est_makespan_us
+    assert refined.refine_delta_us == pytest.approx(
+        seeded.est_makespan_us - refined.est_makespan_us)
+    _check_plan_valid(g, refined, BENCH_SIM)
+    # stats() surfaces the provenance (floats, for the bench writers)
+    s = refined.stats()
+    assert s["refined"] == 1.0
+    assert s["refine_iters"] == float(refined.refine_iters)
+    assert s["est_makespan_us"] == pytest.approx(refined.est_makespan_us)
+
+
+def test_refine_stale_sibling_regression():
+    """Accepting a candidate at a boundary invalidates its sibling
+    proposals; applying one used to corrupt the op multiset.  A generous
+    budget drives many accepts — the result must stay a permutation."""
+    from benchmarks.bench_inference import BENCH_SIM
+    from benchmarks.workloads import moe_ragged_workload
+    g = moe_ragged_workload()
+    seeded = autotune(g, cfg=BENCH_SIM)
+    refined = refine(seeded, cfg=BENCH_SIM,
+                     refine_cfg=RefineConfig(budget_factor=64.0,
+                                             min_budget=1 << 18,
+                                             plateau=256, max_rounds=6))
+    _check_plan_valid(g, refined, BENCH_SIM)
+
+
+def test_refine_respects_tiny_budget_and_terminates():
+    cfg = SimConfig(resource_cap=32e6, head_of_line=True)
+    g = random_dag(np.random.default_rng(7), 200)
+    seeded = autotune(g, cfg=cfg)
+    rcfg = RefineConfig(budget_factor=0.001, min_budget=0)
+    refined = refine(seeded, cfg=cfg, refine_cfg=rcfg)
+    # no budget for any candidate: the seed comes back untouched (with
+    # bookkeeping attached), never a worse or invalid plan
+    assert refined.est_makespan_us <= seeded.est_makespan_us + 1e-9
+    _check_plan_valid(g, refined, cfg)
+
+
+def test_refine_is_deterministic():
+    from benchmarks.bench_inference import BENCH_SIM
+    from benchmarks.workloads import moe_ragged_workload
+    g = moe_ragged_workload()
+    a = autotune(g, cfg=BENCH_SIM, refine=True)
+    b = autotune(g, cfg=BENCH_SIM, refine=True)
+    assert a.order == b.order
+    assert a.est_makespan_us == b.est_makespan_us
+    assert a.refine_iters == b.refine_iters
+
+
+def test_refine_config_validation():
+    with pytest.raises(ValueError):
+        RefineConfig(budget_factor=0)
+    with pytest.raises(ValueError):
+        RefineConfig(plateau=0)
+    with pytest.raises(ValueError):
+        RefineConfig(rebalance=((0.0, None),))
+    with pytest.raises(ValueError):
+        RefineConfig(rebalance=((0.75, 0),))
+    with pytest.raises(TypeError):
+        autotune(staged_gap_graph(2, 0), cfg=GAP_SIM, refine="yes")
+
+
+# =========================================================================
+# (d) SweepState.fork delta re-estimation
+# =========================================================================
+
+def test_sweep_state_fork_matches_full_sweep():
+    cfg = SimConfig(resource_cap=24e6, sync_us=0.5, launch_us=1.0,
+                    head_of_line=True)
+    g = random_dag(np.random.default_rng(11), 60)
+    profiles = ModelProfiler(V5E).profile(g)
+    splan = ALLOC_POLICIES["opara"](g)
+    tables = op_tables(g, splan, profiles)
+    order = ORDER_POLICIES["opara"](g, profiles)
+    full = _sweep(tables, order, cfg)
+    # checkpoint mid-order, fork, finish on the fork: same makespan
+    st = SweepState(len(g))
+    sweep_extend(tables, order[:30], cfg, st)
+    fork = st.fork()
+    sweep_extend(tables, order[30:], cfg, fork)
+    assert fork.makespan == pytest.approx(full)
+    # the parent's scalar state is untouched by the fork's progress
+    assert st.makespan < fork.makespan
+    assert len(st.active) <= len(g)
+    # a second fork from the same checkpoint reproduces the result (entries
+    # in the shared end array are rewritten before any read)
+    fork2 = st.fork()
+    sweep_extend(tables, order[30:], cfg, fork2)
+    assert fork2.makespan == pytest.approx(full)
+
+
+# =========================================================================
+# (e) session wiring
+# =========================================================================
+
+def test_session_config_refine_validation():
+    with pytest.raises(ValueError, match="autotune"):
+        SessionConfig(refine=True)
+    with pytest.raises(TypeError):
+        SessionConfig(autotune=True, refine="always")
+    SessionConfig(autotune=True, refine=RefineConfig())   # fine
+
+
+def test_plan_cache_keys_by_refine_config():
+    from repro.core.session import _plan_key
+    g = staged_gap_graph(4, 1, 4)
+    base = SessionConfig(autotune=True)
+    on = SessionConfig(autotune=True, refine=True)
+    explicit = SessionConfig(autotune=True, refine=RefineConfig())
+    custom = SessionConfig(autotune=True,
+                           refine=RefineConfig(budget_factor=8.0))
+    assert _plan_key(g, base) != _plan_key(g, on)
+    assert _plan_key(g, on) == _plan_key(g, explicit)
+    assert _plan_key(g, custom) != _plan_key(g, on)
+
+
+def test_session_refine_plan_and_explain():
+    from benchmarks.bench_inference import BENCH_SIM
+    from benchmarks.workloads import moe_ragged_workload
+    g = moe_ragged_workload()
+    sess = Session(SessionConfig(autotune=True, refine=True,
+                                 sim_cfg=BENCH_SIM))
+    m = sess.compile(g)
+    assert m.plan.refined
+    ex = m.explain()
+    assert ex["config"]["refine"] is True
+    assert ex["schedule"]["refined"] is True
+    assert ex["schedule"]["refine_iters"] == m.plan.refine_iters
+    assert ex["schedule"]["refine_delta_us"] == pytest.approx(
+        m.plan.refine_delta_us)
+    assert ex["stages_ms"]["refine"] == m.plan.refine_ms
+    # warm path: the refined plan is a cache hit, not a re-search
+    before = sess.cache_stats()["plan_hits"]
+    p2 = sess.plan(g)
+    assert sess.cache_stats()["plan_hits"] == before + 1
+    assert p2.order == m.plan.order
