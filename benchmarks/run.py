@@ -10,6 +10,7 @@ Sections:
     fig8_throughput      throughput vs batch size                (Fig. 8)
     sec5_3_overhead      profiling + scheduling overhead         (§5.3)
     wallclock            real CPU wall-clock eager/jit/fused     (Fig. 5a mech.)
+    serving_overload     admission tier vs FIFO under overload   (serving tier)
 
 Structured output: sections that track the perf trajectory additionally
 write machine-diffable JSON (``BENCH_scheduler.json`` — per-workload
@@ -65,6 +66,10 @@ def main(argv=None) -> int:
     ]
     if not args.quick:
         sections.append(("wallclock", bench_wallclock.run))
+        # real model inference on an overload trace — skipped in --quick so
+        # the CI bench gate's wall-clock envelope is untouched
+        from . import bench_serving
+        sections.append(("serving_overload", bench_serving.run))
 
     from repro.core import reset_default_session
 

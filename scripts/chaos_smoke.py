@@ -100,18 +100,31 @@ def check_graph_site(site: str, ragged: bool = False) -> None:
     assert reported >= 1, f"site={site}: degradation not reported ({stats})"
 
 
+_SERVE_MODEL = None
+
+
+def _serve_model():
+    """One smoke model shared by every serving scenario (jit reuse)."""
+    global _SERVE_MODEL
+    if _SERVE_MODEL is None:
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import make_model
+
+        cfg = get_config("llama3.2-1b", smoke=True)
+        model = make_model(cfg)
+        params = model.init(jax.random.key(0))
+        _SERVE_MODEL = (cfg, model, params)
+    return _SERVE_MODEL
+
+
 def check_engine_site() -> None:
     """decode_step corrupt → ONE poisoned request FAILED, co-batch completes
     with fault-free outputs."""
-    import jax
-
-    from repro.configs import get_config
-    from repro.models import make_model
     from repro.serving import InferenceEngine, Request, RequestState
 
-    cfg = get_config("llama3.2-1b", smoke=True)
-    model = make_model(cfg)
-    params = model.init(jax.random.key(0))
+    cfg, model, params = _serve_model()
 
     def run():
         engine = InferenceEngine(model, params, max_slots=3, max_len=32)
@@ -129,6 +142,94 @@ def check_engine_site() -> None:
     assert len(survivors) == 2
     for r in survivors:
         assert r.output == clean[r.rid].output, f"rid={r.rid} outputs diverged"
+
+
+def _overload_run():
+    """Deterministic burst trace (arrival > capacity, mixed tenants /
+    priorities / deadlines) against a bounded admission queue.  Returns
+    (engine, {rid: request}) after every request went terminal."""
+    from repro.serving import AdmissionConfig, InferenceEngine, Request
+
+    cfg, model, params = _serve_model()
+    engine = InferenceEngine(
+        model, params, max_slots=2, max_len=32,
+        admission=AdmissionConfig(max_queue=3, tenant_quota=2))
+    reqs = []
+    for rid in range(7):                          # burst: 7 at once, 2 slots
+        reqs.append(Request(
+            rid=rid, prompt=[1 + rid, 2, 3], max_tokens=4,
+            tenant=f"t{rid % 3}", priority=rid % 2,
+            ttl=10 + 2 * rid if rid % 2 else None))
+        engine.submit(reqs[-1])
+    engine.run(max_ticks=64)
+    return engine, {r.rid: r for r in reqs}
+
+
+def _check_all_terminal(engine, done, site: str) -> None:
+    from repro.serving import TERMINAL_STATES
+
+    for r in done.values():
+        assert r.state in TERMINAL_STATES, \
+            f"site={site}: rid={r.rid} stranded in {r.state}"
+    assert len(engine.admission) == 0, f"site={site}: queue not drained"
+    assert all(s is None for s in engine.slots), \
+        f"site={site}: slot not released"
+
+
+def check_overload_site(site: str) -> None:
+    """Serving overload with an admission-tier fault armed: the engine
+    must neither crash nor strand a request, the degradation must be
+    counted, and surviving DONE outputs must equal the fault-free run
+    (greedy decode is schedule-independent)."""
+    from repro.serving import RequestState
+
+    with _disarmed():
+        _, clean = _overload_run()
+    engine, done = _overload_run()
+    _check_all_terminal(engine, done, site)
+    counter = {"admission_enqueue": "admission_faults",
+               "slot_preempt": "preempt_faults",
+               "deadline_check": "deadline_faults"}[site]
+    assert engine.fault_stats[counter] >= 1, \
+        f"site={site}: fault not counted ({engine.fault_stats})"
+    for rid, r in done.items():
+        if r.state is RequestState.DONE \
+                and clean[rid].state is RequestState.DONE:
+            assert r.output == clean[rid].output, \
+                f"site={site}: rid={rid} outputs diverged"
+
+
+def check_preempt_site() -> None:
+    """slot_preempt raise → the preemption is skipped (victim keeps its
+    slot, the critical request expires instead) — never a crash."""
+    from repro.serving import (AdmissionConfig, InferenceEngine, Request,
+                               RequestState)
+
+    cfg, model, params = _serve_model()
+
+    def run():
+        engine = InferenceEngine(model, params, max_slots=1, max_len=32,
+                                 admission=AdmissionConfig())
+        batch = Request(rid=0, prompt=[1, 2, 3], max_tokens=8, priority=0)
+        engine.submit(batch)
+        engine.step()                      # batch takes the only slot
+        prod = Request(rid=1, prompt=[4, 5, 6], max_tokens=4, priority=2,
+                       ttl=6)              # deadline-critical next tick
+        engine.submit(prod)
+        engine.run(max_ticks=64)
+        return engine, batch, prod
+
+    with _disarmed():
+        _, clean_batch, clean_prod = run()
+    assert clean_prod.state is RequestState.DONE       # preemption worked
+    assert clean_batch.preemptions == 1
+    engine, batch, prod = run()
+    assert engine.fault_stats["preempt_faults"] >= 1, \
+        f"preemption fault not counted ({engine.fault_stats})"
+    assert batch.state is RequestState.DONE
+    assert batch.output == clean_batch.output
+    assert prod.state is RequestState.EXPIRED          # skipped preemption
+    _check_all_terminal(engine, {0: batch, 1: prod}, "slot_preempt")
 
 
 class _disarmed:
@@ -151,19 +252,29 @@ SCENARIOS = [
      lambda: check_graph_site("calib_disk_write")),
     ("plan_validate:raise:-1", lambda: check_graph_site("plan_validate")),
     ("decode_step:corrupt:1:0", check_engine_site),
+    # serving tier under overload: burst trace × each admission fault site
+    ("admission_enqueue:raise:2",
+     lambda: check_overload_site("admission_enqueue")),
+    ("deadline_check:raise:-1",
+     lambda: check_overload_site("deadline_check")),
+    ("slot_preempt:raise:-1", check_preempt_site),
 ]
+
+# scenarios that spin up the (slower) serving engine — skipped by --skip-engine
+_ENGINE_SITES = ("decode_step", "admission_enqueue", "deadline_check",
+                 "slot_preempt")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-engine", action="store_true",
-                    help="skip the (slower) serving-engine decode scenario")
+                    help="skip the (slower) serving-engine scenarios")
     args = ap.parse_args(argv)
     failures = 0
     with tempfile.TemporaryDirectory() as calib_dir:
         os.environ["REPRO_CALIB_DIR"] = calib_dir
         for spec, scenario in SCENARIOS:
-            if args.skip_engine and spec.startswith("decode_step"):
+            if args.skip_engine and spec.startswith(_ENGINE_SITES):
                 print(f"[chaos] SKIP {spec}")
                 continue
             os.environ[ENV_VAR] = spec

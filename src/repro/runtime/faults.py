@@ -22,6 +22,12 @@ Injection sites (one per ladder rung):
 ``plan_validate``       wave-schedule validation at the top of ``capture()``
 ``decode_step``         the serving engine's jitted decode step (corrupt
                         mode poisons one slot's logits — a poisoned request)
+``admission_enqueue``   the serving admission tier's enqueue path (raise
+                        mode sheds the incoming request with provenance)
+``slot_preempt``        the engine's priority-preemption decision (raise
+                        mode skips the preemption; the victim keeps running)
+``deadline_check``      the engine's per-tick deadline sweep (raise mode
+                        skips ONE tick of expiry)
 ======================  ====================================================
 
 Activation is either **per-session** (``SessionConfig(fault_plan=...)``,
@@ -55,6 +61,9 @@ SITES = (
     "calib_disk_write",
     "plan_validate",
     "decode_step",
+    "admission_enqueue",
+    "slot_preempt",
+    "deadline_check",
 )
 
 MODES = ("raise", "corrupt", "delay")

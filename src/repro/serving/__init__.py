@@ -1,4 +1,7 @@
-from .engine import InferenceEngine, Request, RequestState
+from .admission import (AdmissionConfig, AdmissionQueue, Request,
+                        RequestState, TERMINAL_STATES)
+from .engine import InferenceEngine
 from .sampler import sample_token
 
-__all__ = ["InferenceEngine", "Request", "RequestState", "sample_token"]
+__all__ = ["InferenceEngine", "Request", "RequestState", "AdmissionConfig",
+           "AdmissionQueue", "TERMINAL_STATES", "sample_token"]

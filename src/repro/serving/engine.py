@@ -1,4 +1,4 @@
-"""Continuous-batching inference engine.
+"""Continuous-batching inference engine with an overload-robust admission tier.
 
 vLLM-style slot scheduler shrunk to the essentials, built on the Model
 facade's prefill/decode step functions (which are exactly what the dry-run
@@ -8,7 +8,18 @@ lowers at production scale):
   * prefill admission when a slot frees (prefill and decode interleave —
     one engine tick is either one prefill or one batched decode step);
   * per-request sampling params; EOS / max-token completion;
-  * deterministic given (seed, arrival order).
+  * deterministic given (seed, arrival order, deadlines).
+
+In front of the slots sits the admission tier (:mod:`.admission`): a
+bounded, per-tenant-quota queue with EDF/priority batch assembly,
+load-shedding (terminal ``SHED``), deadline expiry of queued *and* running
+requests, and priority preemption of a running request when a
+higher-priority one would otherwise miss its deadline.  All of it runs on
+the engine's deterministic **tick clock** — no wall time — and every
+decision is recorded in ``fault_stats`` (global + per-tenant) and on
+``Request.error``.  ``run()`` guarantees every submitted request ends in a
+terminal state: leftovers at tick-budget exhaustion are expired, never
+silently stranded.
 
 Batched decode across slots is itself operator parallelism — every slot's
 decode operators fuse into one wave, so the engine's throughput benefits
@@ -22,15 +33,16 @@ geometry and hardware hydrates from the cache instead of re-timing (paper
 §3.2, "profile each DNN inference only once").  Engines default to the
 process-wide :func:`repro.core.default_session`; a serving fleet that wants
 isolated (or differently configured) schedule state passes its own
-``session=Session(SessionConfig(...))``.
+``session=Session(SessionConfig(...))`` — and per-*tenant* Sessions via
+``tenant_sessions=`` so each tenant's shed/expire/preempt provenance lands
+in its own ``guard_log``.
 """
 from __future__ import annotations
 
-import dataclasses
-import enum
+import copy
 import warnings
 import weakref
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -38,9 +50,15 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import Model
-from ..runtime.faults import FaultPlan, get_active as _active_faults
+from ..runtime.faults import FaultInjected, FaultPlan
+from ..runtime.faults import get_active as _active_faults
 from ..runtime.guard import DegradationWarning
+from .admission import (AdmissionConfig, AdmissionQueue, Request,
+                        RequestState, TERMINAL_STATES, deadline_critical)
 from .sampler import sample_token
+
+__all__ = ["InferenceEngine", "Request", "RequestState", "AdmissionConfig",
+           "TERMINAL_STATES"]
 
 # Executable reuse across engine instances (the serving-side analogue of the
 # core compiled-plan cache): a jax.jit wrapper created per-engine would
@@ -73,50 +91,59 @@ def _cached_decode_fn(model: Model):
     return fn
 
 
-class RequestState(enum.Enum):
-    PENDING = "pending"
-    RUNNING = "running"
-    DONE = "done"
-    # terminal: this request was poisoned (non-finite logits, prefill
-    # failure) and was evicted WITHOUT killing co-batched requests
-    FAILED = "failed"
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_tokens: int = 32
-    temperature: float = 0.0
-    eos_id: int | None = None
-    state: RequestState = RequestState.PENDING
-    output: list[int] = dataclasses.field(default_factory=list)
-    error: str | None = None          # diagnosis when state is FAILED
+def _empty_tenant_stats() -> dict[str, int]:
+    return {"submitted": 0, "done": 0, "failed": 0, "shed": 0,
+            "expired": 0, "preempted": 0}
 
 
 class InferenceEngine:
     def __init__(self, model: Model, params, max_slots: int = 4,
                  max_len: int = 512, seed: int = 0, calibrate: bool = False,
-                 session=None, fault_plan: FaultPlan | None = None):
+                 session=None, fault_plan: FaultPlan | None = None,
+                 admission: AdmissionConfig | None = None,
+                 watchdog_probation: int = 8,
+                 tenant_sessions: Mapping[str, Any] | None = None):
         self.model = model
         self.params = params
         # repro.core.Session owning this engine's schedule/calibration cache
         # state (None → the process-wide default session, so engines share
         # measured profiles the way the module-global caches used to).
         self.session = session
+        # per-tenant Sessions (PR 4 isolation): shed/expire/preempt events
+        # for a tenant's requests are noted on that tenant's guard_log, so
+        # fleets can surface per-tenant degradation provenance
+        self.tenant_sessions = dict(tenant_sessions or {})
         # per-engine injection plan (None → $REPRO_FAULT_PLAN, if armed)
         self.fault_plan = fault_plan
-        # watchdog latch: once the jitted decode step fails, every later
-        # tick runs the eager (uncompiled, sequential-semantics) step —
-        # slower, but the batch keeps draining
+        # watchdog latch: once the jitted decode step fails, ticks run the
+        # eager (uncompiled, sequential-semantics) step.  After
+        # ``watchdog_probation`` clean eager ticks the jitted step is
+        # retried ONCE (probation rung); 0 disables probation — the PR 6
+        # latch-forever behavior.
         self._use_compiled = True
+        self.watchdog_probation = watchdog_probation
+        self._eager_clean_ticks = 0
         self.fault_stats = {"decode_faults": 0, "failed_requests": 0,
-                            "watchdog_fallbacks": 0}
+                            "watchdog_fallbacks": 0, "watchdog_probations": 0,
+                            "shed_requests": 0, "expired_requests": 0,
+                            "preemptions": 0, "admission_faults": 0,
+                            "preempt_faults": 0, "deadline_faults": 0,
+                            "by_tenant": {}}
         self.cfg: ModelConfig = model.cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.rng = jax.random.key(seed)
-        self.queue: list[Request] = []
+        # deterministic tick clock: one step() == one tick.  Deadlines/TTLs
+        # are expressed in ticks — nothing in the overload machinery reads
+        # wall time, so every shed/preempt/expire decision replays.
+        self.tick = 0
+        # admission tier (defaults reproduce the legacy unbounded FIFO for
+        # deadline-free single-priority traffic)
+        self.admission_cfg = admission if admission is not None \
+            else AdmissionConfig()
+        self.admission = AdmissionQueue(self.admission_cfg)
+        self.accepting = True            # drain() closes admission
+        self._terminal: list[Request] = []   # terminal before reaching a slot
         self.slots: list[Request | None] = [None] * max_slots
         self.pos = np.zeros(max_slots, np.int32)
         self.last_token = np.zeros(max_slots, np.int32)
@@ -132,6 +159,12 @@ class InferenceEngine:
         self.schedule_plan = None
         if calibrate:
             self.calibrate_schedule()
+
+    @property
+    def queue(self) -> list[Request]:
+        """Read-only view of the queued (PENDING) requests, in arrival
+        order — the legacy attribute, now backed by the admission tier."""
+        return list(self.admission)
 
     def calibrate_schedule(self, seq: int = 1, n_layers: int | None = None,
                            repeats: int = 1):
@@ -181,38 +214,268 @@ class InferenceEngine:
         self.schedule_plan = sess.plan(g)
         return self.schedule_plan
 
-    # -- API ---------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    # -- faults / provenance plumbing ---------------------------------------------
+    def _faults(self) -> FaultPlan | None:
+        return (self.fault_plan if self.fault_plan is not None
+                else _active_faults())
 
-    def run(self, max_ticks: int = 1000) -> list[Request]:
-        done: list[Request] = []
-        for _ in range(max_ticks):
-            if not self.queue and all(s is None for s in self.slots):
-                break
-            done.extend(self.step())
-        return done
+    def _tenant_stats(self, tenant: str) -> dict[str, int]:
+        stats = self.fault_stats["by_tenant"].get(tenant)
+        if stats is None:
+            stats = self.fault_stats["by_tenant"][tenant] = \
+                _empty_tenant_stats()
+        return stats
 
-    # -- one tick -----------------------------------------------------------------
-    def step(self) -> list[Request]:
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        if free and self.queue:
-            return self._admit(free[0], self.queue.pop(0))
-        return self._decode_tick()
+    def _tenant_note(self, req: Request, site: str, action: str,
+                     reason: str) -> None:
+        """Per-tenant degradation provenance: the tenant's Session (if the
+        fleet registered one) records the event on ITS guard_log, so tenant
+        dashboards see their own shed/expire/preempt history in isolation."""
+        sess = self.tenant_sessions.get(req.tenant)
+        if sess is not None:
+            sess.note_degradation(site, action, reason, warn=False)
 
+    # -- terminal transitions -----------------------------------------------------
     def _fail(self, req: Request, reason: str) -> Request:
         """Terminal eviction of ONE poisoned request; co-batched requests
         are untouched (their slots, caches and positions stay live)."""
         req.state = RequestState.FAILED
         req.error = reason
+        req.finish_tick = self.tick
         self.fault_stats["failed_requests"] += 1
+        self._tenant_stats(req.tenant)["failed"] += 1
         return req
+
+    def _shed(self, req: Request, reason: str) -> Request:
+        """Terminal refusal at the admission tier (load shedding)."""
+        req.state = RequestState.SHED
+        req.error = reason
+        req.finish_tick = self.tick
+        self.fault_stats["shed_requests"] += 1
+        self._tenant_stats(req.tenant)["shed"] += 1
+        self._tenant_note(req, "admission_enqueue", "admit->shed", reason)
+        return req
+
+    def _expire(self, req: Request, reason: str) -> Request:
+        """Terminal deadline/tick-budget expiry (queued or running)."""
+        req.state = RequestState.EXPIRED
+        req.error = reason
+        req.finish_tick = self.tick
+        self.fault_stats["expired_requests"] += 1
+        self._tenant_stats(req.tenant)["expired"] += 1
+        self._tenant_note(req, "deadline_check", "request->expired", reason)
+        return req
+
+    def _complete(self, req: Request) -> Request:
+        req.state = RequestState.DONE
+        req.finish_tick = self.tick
+        self._tenant_stats(req.tenant)["done"] += 1
+        return req
+
+    def _clear_slot(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.last_token[slot] = 0
+
+    # -- API ---------------------------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        """Offer ``req`` to the admission tier.
+
+        May immediately take the request terminal: SHED (queue bound,
+        tenant quota, draining engine, injected admission fault) or FAILED
+        (prompt exceeds the KV capacity).  Terminal-at-submit requests are
+        still returned by ``run()``/``step()`` — nothing vanishes.
+        """
+        if req.submit_tick < 0:
+            req.submit_tick = self.tick
+        if req.deadline is None and req.ttl is not None:
+            req.deadline = req.submit_tick + req.ttl
+        self._tenant_stats(req.tenant)["submitted"] += 1
+        if not self.accepting:
+            self._terminal.append(
+                self._shed(req, "engine draining: admission closed"))
+            return req
+        faults = self._faults()
+        if faults is not None:
+            try:
+                faults.fire("admission_enqueue")
+            except FaultInjected as exc:
+                # overload ladder: an admission-path fault sheds THIS
+                # request with provenance instead of crashing the engine
+                self.fault_stats["admission_faults"] += 1
+                self._terminal.append(self._shed(req, f"{exc}"))
+                return req
+        # KV-capacity check at admission (not at slot time): a prompt that
+        # cannot fit the slot cache used to be spliced anyway — pos[slot]
+        # started out of bounds and decode writes silently clamped.  Reject
+        # with a diagnosis; need >= 1 decode position after the prompt.
+        n_tokens = len(req.prompt) + len(req.output)
+        if n_tokens >= self.max_len:
+            self._terminal.append(self._fail(req, (
+                f"prompt length {n_tokens} exceeds KV capacity "
+                f"(max_len={self.max_len} incl. at least one decode "
+                "position); rejected at admission")))
+            return req
+        admitted, shed, reason = self.admission.offer(req, self.tick)
+        for victim in shed:
+            self._terminal.append(self._shed(victim, reason))
+        return req
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        """Tick until all work is terminal or ``max_ticks`` is exhausted.
+
+        On tick-budget exhaustion every queued/running leftover is expired
+        with ``error="tick budget exhausted"`` — no request ever silently
+        vanishes; the returned list covers every submitted request.
+        """
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            if not self._work_pending():
+                break
+            done.extend(self.step())
+        done.extend(self._drain_terminal())
+        leftovers = self.admission.clear()
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                leftovers.append(req)
+                self._clear_slot(i)
+        for req in leftovers:
+            done.append(self._expire(req, "tick budget exhausted"))
+        return done
+
+    def drain(self, max_ticks: int = 1000) -> list[Request]:
+        """Engine lifecycle: close admission and finish in-flight work so a
+        fleet can rotate this engine out safely.  Requests submitted after
+        ``drain()`` begins are shed with a "draining" diagnosis."""
+        self.accepting = False
+        return self.run(max_ticks)
+
+    def health(self) -> dict[str, Any]:
+        """Structured liveness/pressure snapshot for fleet managers."""
+        running = sum(1 for s in self.slots if s is not None)
+        return {
+            "tick": self.tick,
+            "accepting": self.accepting,
+            "queued": len(self.admission),
+            "queued_by_tenant": self.admission.depth_by_tenant(),
+            "running": running,
+            "free_slots": self.max_slots - running,
+            "compiled_decode": self._use_compiled,
+            "fault_stats": copy.deepcopy(self.fault_stats),
+        }
+
+    # -- one tick -----------------------------------------------------------------
+    def step(self) -> list[Request]:
+        self.tick += 1
+        out = self._drain_terminal()
+        out.extend(self._deadline_sweep())
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if free and len(self.admission):
+            req = self.admission.pop_next()
+            out.extend(self._admit(free[0], req))
+            return out
+        if not free and len(self.admission) and self.admission_cfg.preemption:
+            out.extend(self._maybe_preempt())
+        out.extend(self._decode_tick())
+        return out
+
+    def _work_pending(self) -> bool:
+        return bool(len(self.admission) or self._terminal
+                    or any(s is not None for s in self.slots))
+
+    def _drain_terminal(self) -> list[Request]:
+        out, self._terminal = self._terminal, []
+        return out
+
+    def _deadline_sweep(self) -> list[Request]:
+        """Expire queued requests that can no longer meet their deadline
+        and evict running requests whose deadline has passed (reusing the
+        per-slot eviction path — co-batched slots stay live)."""
+        out: list[Request] = []
+        faults = self._faults()
+        if faults is not None:
+            try:
+                faults.fire("deadline_check")
+            except FaultInjected:
+                # ladder: a faulted sweep skips ONE tick of expiry — every
+                # request simply lives one tick longer; nothing crashes
+                self.fault_stats["deadline_faults"] += 1
+                return out
+        for req, reason in self.admission.expire(self.tick):
+            out.append(self._expire(req, reason))
+        if self.admission_cfg.expire_running:
+            for i, req in enumerate(self.slots):
+                if req is None or req.deadline is None:
+                    continue
+                if self.tick > req.deadline:
+                    self._clear_slot(i)
+                    out.append(self._expire(req, (
+                        f"deadline {req.deadline} passed at tick "
+                        f"{self.tick} with {len(req.output)} tokens "
+                        "generated; slot evicted")))
+        return out
+
+    def _maybe_preempt(self) -> list[Request]:
+        """Evict the least-important running request when the most urgent
+        queued one is deadline-critical and strictly higher priority.  The
+        victim returns to the queue PENDING (output retained — it resumes
+        by re-prefilling prompt+output on re-admission)."""
+        cand = self.admission.peek()
+        if cand is None or not deadline_critical(cand, self.tick):
+            return []
+        running = [(i, req) for i, req in enumerate(self.slots)
+                   if req is not None]
+        if not running:
+            return []
+        # least important victim: lowest priority, then most deadline
+        # slack (None = infinite), then lowest slot index — deterministic
+        slot, victim = min(
+            running,
+            key=lambda it: (it[1].priority,
+                            -(float("inf") if it[1].deadline is None
+                              else float(it[1].deadline)), it[0]))
+        if victim.priority >= cand.priority:
+            return []
+        faults = self._faults()
+        if faults is not None:
+            try:
+                faults.fire("slot_preempt")
+            except FaultInjected:
+                # ladder: a faulted preemption is skipped — the critical
+                # request waits (and may expire), the victim keeps running
+                self.fault_stats["preempt_faults"] += 1
+                return []
+        self._clear_slot(slot)
+        victim.state = RequestState.PENDING
+        victim.preemptions += 1
+        self.fault_stats["preemptions"] += 1
+        self._tenant_stats(victim.tenant)["preempted"] += 1
+        reason = (f"slot {slot} preempted at tick {self.tick} for "
+                  f"rid={cand.rid} (priority {cand.priority} > "
+                  f"{victim.priority}, deadline {cand.deadline})")
+        self._tenant_note(victim, "slot_preempt", "running->requeued", reason)
+        admitted, shed, shed_reason = self.admission.offer(victim, self.tick)
+        for req in shed:
+            self._terminal.append(
+                self._shed(req, f"preempted then {shed_reason}"))
+        return []
 
     def _admit(self, slot: int, req: Request) -> list[Request]:
         req.state = RequestState.RUNNING
         if not req.prompt:
             return [self._fail(req, "empty prompt")]
-        tokens = jnp.asarray([req.prompt], jnp.int32)
+        # a preempted request resumes by replaying prompt + generated
+        # tokens as the prefill stream; generation continues where it left
+        # off (same math — the KV it lost is rebuilt, not approximated)
+        tokens_list = list(req.prompt) + list(req.output)
+        if len(tokens_list) >= self.max_len:
+            # unreachable for requests that passed the submit-time check
+            # (a preempted slot always sits below max_len - 1), but a
+            # silent out-of-bounds splice must never come back
+            return [self._fail(req, (
+                f"token stream length {len(tokens_list)} exceeds KV "
+                f"capacity (max_len={self.max_len}) at slot admission"))]
+        tokens = jnp.asarray([tokens_list], jnp.int32)
         try:
             logits, cache = self.model.prefill(
                 self.params, {"tokens": tokens},
@@ -228,13 +491,12 @@ class InferenceEngine:
         req.output.append(first)
         if (req.eos_id is not None and first == req.eos_id) \
                 or len(req.output) >= req.max_tokens:
-            req.state = RequestState.DONE
-            return [req]
+            return [self._complete(req)]
         # splice the single-request cache into the shared slot cache
         self.caches = jax.tree_util.tree_map(
             lambda big, small: _splice(big, small, slot), self.caches, cache)
         self.slots[slot] = req
-        self.pos[slot] = len(req.prompt)
+        self.pos[slot] = len(tokens_list)
         self.last_token[slot] = first
         return []
 
@@ -245,8 +507,7 @@ class InferenceEngine:
         token = jnp.asarray(self.last_token)
         pos = jnp.asarray(self.pos)
         logits = None
-        faults = (self.fault_plan if self.fault_plan is not None
-                  else _active_faults())
+        faults = self._faults()
         if self._use_compiled:
             try:
                 logits, caches = self._decode(self.params, self.caches,
@@ -258,11 +519,13 @@ class InferenceEngine:
                     logits = faults.fire("decode_step", payload=logits)
                 self.caches = caches
             except Exception as exc:
-                # step watchdog: latch onto the eager (uncompiled) step for
-                # the rest of this engine's life — the batch keeps draining
+                # step watchdog: latch onto the eager (uncompiled) step —
+                # the batch keeps draining.  The probation rung below may
+                # retry the jitted step after enough clean eager ticks.
                 self.fault_stats["decode_faults"] += 1
                 self.fault_stats["watchdog_fallbacks"] += 1
                 self._use_compiled = False
+                self._eager_clean_ticks = 0
                 warnings.warn(
                     f"decode watchdog: jitted step failed ({exc!r}); "
                     "falling back to the eager decode step",
@@ -281,12 +544,25 @@ class InferenceEngine:
                 failed = []
                 for i in active:
                     req = self.slots[i]
-                    self.slots[i] = None
-                    self.pos[i] = 0
-                    self.last_token[i] = 0
+                    self._clear_slot(i)
                     failed.append(self._fail(
                         req, f"decode failed on both rungs: {exc!r}"))
                 return failed
+            # probation rung: after N clean eager ticks, un-latch and retry
+            # the jitted step once next tick instead of staying eager
+            # forever.  If it fails again the watchdog re-latches (counters
+            # keep the history); 0 disables probation.
+            if not self._use_compiled and self.watchdog_probation > 0:
+                self._eager_clean_ticks += 1
+                if self._eager_clean_ticks >= self.watchdog_probation:
+                    self._use_compiled = True
+                    self._eager_clean_ticks = 0
+                    self.fault_stats["watchdog_probations"] += 1
+                    if self.session is not None:
+                        self.session.note_degradation(
+                            "decode_step", "eager->jitted (probation)",
+                            f"{self.watchdog_probation} clean eager ticks; "
+                            "retrying the jitted decode step", warn=False)
         finite_rows = np.isfinite(np.asarray(logits)).all(axis=-1)
         self.rng, sub = jax.random.split(self.rng)
         finished: list[Request] = []
@@ -298,9 +574,7 @@ class InferenceEngine:
                 self.fault_stats["decode_faults"] += 1
                 finished.append(self._fail(
                     req, "decode produced non-finite logits"))
-                self.slots[i] = None
-                self.pos[i] = 0
-                self.last_token[i] = 0
+                self._clear_slot(i)
                 continue
             t = int(sample_token(logits[i:i + 1], jax.random.fold_in(sub, i),
                                  req.temperature)[0])
@@ -310,11 +584,8 @@ class InferenceEngine:
             hit_eos = req.eos_id is not None and t == req.eos_id
             if hit_eos or len(req.output) >= req.max_tokens \
                     or self.pos[i] >= self.max_len - 1:
-                req.state = RequestState.DONE
-                finished.append(req)
-                self.slots[i] = None
-                self.pos[i] = 0
-                self.last_token[i] = 0
+                finished.append(self._complete(req))
+                self._clear_slot(i)
         return finished
 
 

@@ -1,0 +1,486 @@
+"""Overload-robust admission tier: bounded queue, quotas, EDF assembly,
+shedding, deadline expiry, preemption, drain/health lifecycle, watchdog
+probation, and multi-slot determinism under compiled AND eager decode."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import make_model
+from repro.runtime.faults import FaultPlan
+from repro.serving import (AdmissionConfig, AdmissionQueue, InferenceEngine,
+                           Request, RequestState, TERMINAL_STATES)
+from repro.serving.admission import deadline_critical, feasible
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _req(rid, priority=0, deadline=None, ttl=None, tenant="default",
+         max_tokens=4, prompt=None):
+    return Request(rid=rid, prompt=prompt or [1 + rid, 2, 3],
+                   max_tokens=max_tokens, tenant=tenant, priority=priority,
+                   deadline=deadline, ttl=ttl)
+
+
+# =========================================================================
+# AdmissionQueue (pure policy — no model)
+# =========================================================================
+
+def test_edf_ordering_priority_then_deadline_then_arrival():
+    q = AdmissionQueue()
+    a = _req(0, priority=0, deadline=5)
+    b = _req(1, priority=2, deadline=50)
+    c = _req(2, priority=2, deadline=10)
+    d = _req(3, priority=2, deadline=10)     # same as c: arrival breaks tie
+    for r in (a, b, c, d):
+        assert q.offer(r, now=0) == (True, [], "")
+    assert [q.pop_next().rid for _ in range(4)] == [2, 3, 1, 0]
+
+
+def test_queue_without_metadata_is_fifo():
+    """Deadline-free single-priority traffic degenerates to exact FIFO —
+    the legacy engine behavior."""
+    q = AdmissionQueue()
+    for rid in range(5):
+        q.offer(_req(rid), now=0)
+    assert [q.pop_next().rid for _ in range(5)] == [0, 1, 2, 3, 4]
+
+
+def test_bounded_queue_sheds_incoming():
+    q = AdmissionQueue(AdmissionConfig(max_queue=2))
+    q.offer(_req(0), 0)
+    q.offer(_req(1), 0)
+    admitted, shed, reason = q.offer(_req(2), 0)
+    assert not admitted and shed[0].rid == 2 and "queue full" in reason
+    assert len(q) == 2
+
+
+def test_bounded_queue_displaces_less_urgent():
+    q = AdmissionQueue(AdmissionConfig(max_queue=2))
+    q.offer(_req(0, priority=1), 0)
+    q.offer(_req(1, priority=0), 0)
+    admitted, shed, reason = q.offer(_req(2, priority=3, deadline=9), 0)
+    assert admitted and shed[0].rid == 1 and "displaced" in reason
+    assert sorted(r.rid for r in q) == [0, 2]
+    # an equal-urgency newcomer never bumps an older request
+    admitted, shed, _ = q.offer(_req(3, priority=1), 0)
+    assert not admitted and shed[0].rid == 3
+
+
+def test_fifo_policy_never_displaces():
+    q = AdmissionQueue(AdmissionConfig(max_queue=1, policy="fifo"))
+    q.offer(_req(0), 0)
+    admitted, shed, _ = q.offer(_req(1, priority=9, deadline=1), 0)
+    assert not admitted and shed[0].rid == 1
+
+
+def test_tenant_quota():
+    q = AdmissionQueue(AdmissionConfig(tenant_quota=2))
+    q.offer(_req(0, tenant="a"), 0)
+    q.offer(_req(1, tenant="a"), 0)
+    admitted, shed, reason = q.offer(_req(2, tenant="a"), 0)
+    assert not admitted and "quota" in reason
+    admitted, _, _ = q.offer(_req(3, tenant="b"), 0)   # other tenant is fine
+    assert admitted
+
+
+def test_queue_expiry_passed_and_infeasible():
+    q = AdmissionQueue()
+    q.offer(_req(0, deadline=3, max_tokens=2), 0)     # passed at now=4
+    q.offer(_req(1, deadline=10, max_tokens=9), 0)    # infeasible at now=4
+    q.offer(_req(2, deadline=10, max_tokens=2), 0)    # still fine
+    q.offer(_req(3), 0)                               # no deadline
+    expired = q.expire(now=4)
+    assert {r.rid for r, _ in expired} == {0, 1}
+    reasons = {r.rid: why for r, why in expired}
+    assert "passed" in reasons[0] and "infeasible" in reasons[1]
+    assert sorted(r.rid for r in q) == [2, 3]
+
+
+def test_feasible_and_critical_windows():
+    r = _req(0, deadline=10, max_tokens=4)            # needs 4 ticks
+    assert feasible(r, now=6) and not feasible(r, now=7)
+    assert not deadline_critical(r, now=4)            # plenty of slack
+    assert deadline_critical(r, now=5)                # need+1 window
+    assert deadline_critical(r, now=6)                # last feasible tick
+    assert not deadline_critical(r, now=7)            # doomed → expiry's job
+    assert not deadline_critical(_req(1), now=0)      # no deadline
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError, match="policy"):
+        AdmissionConfig(policy="lifo")
+    with pytest.raises(ValueError, match="max_queue"):
+        AdmissionConfig(max_queue=0)
+    with pytest.raises(ValueError, match="tenant_quota"):
+        AdmissionConfig(tenant_quota=0)
+
+
+# =========================================================================
+# Engine: admission-time rejections (satellite regressions)
+# =========================================================================
+
+def test_oversized_prompt_rejected_at_admission(small_model):
+    """Regression: a prompt with len(prompt) >= max_len used to be spliced
+    anyway with pos[slot] out of bounds (silent KV overflow).  It must be
+    rejected terminally at admission with a diagnosis."""
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=16)
+    engine.submit(Request(rid=0, prompt=list(range(1, 17)), max_tokens=4))
+    done = engine.run()
+    assert len(done) == 1
+    assert done[0].state is RequestState.FAILED
+    assert "KV capacity" in done[0].error
+    assert all(s is None for s in engine.slots)       # never took a slot
+
+
+def test_prompt_at_capacity_boundary_still_serves(small_model):
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=16)
+    engine.submit(Request(rid=0, prompt=list(range(1, 16)), max_tokens=4))
+    done = engine.run()
+    assert done[0].state is RequestState.DONE
+    assert len(done[0].output) >= 1
+
+
+def test_tick_budget_exhaustion_strands_nothing(small_model):
+    """Regression: run(max_ticks) used to return silently with requests
+    still PENDING/RUNNING.  Leftovers must be expired terminally."""
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32)
+    for rid in range(4):
+        engine.submit(Request(rid=rid, prompt=[1 + rid, 2], max_tokens=8))
+    done = engine.run(max_ticks=3)
+    assert len(done) == 4                              # nothing vanished
+    assert all(r.state in TERMINAL_STATES for r in done)
+    exhausted = [r for r in done if r.error == "tick budget exhausted"]
+    assert len(exhausted) >= 3                         # 1 running + queued
+    assert all(s is None for s in engine.slots)
+    assert len(engine.admission) == 0
+
+
+# =========================================================================
+# Engine: shed / expire / preempt under the tick clock
+# =========================================================================
+
+def test_overload_sheds_with_provenance(small_model):
+    cfg, model, params = small_model
+    engine = InferenceEngine(
+        model, params, max_slots=1, max_len=32,
+        admission=AdmissionConfig(max_queue=2, tenant_quota=2))
+    reqs = [Request(rid=rid, prompt=[1 + rid, 2], max_tokens=3,
+                    tenant=f"t{rid % 2}") for rid in range(6)]
+    for r in reqs:
+        engine.submit(r)
+    done = {r.rid: r for r in engine.run()}
+    assert len(done) == 6
+    shed = [r for r in done.values() if r.state is RequestState.SHED]
+    assert len(shed) == 4                      # burst: only 2 fit the queue
+    assert all(r.error for r in shed)
+    assert all(done[rid].state is RequestState.DONE for rid in (0, 1))
+    assert engine.fault_stats["shed_requests"] == 4
+    by_tenant = engine.fault_stats["by_tenant"]
+    assert sum(t["shed"] for t in by_tenant.values()) == 4
+    assert sum(t["submitted"] for t in by_tenant.values()) == 6
+
+
+def test_running_request_expires_at_deadline(small_model):
+    """With queued-expiry disabled, a doomed request reaches a slot and is
+    evicted mid-decode the tick its deadline passes (the running rung of
+    the expiry ladder — with the default config the queued sweep catches
+    doomed requests before they ever occupy a slot)."""
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32,
+                             admission=AdmissionConfig(expire_queued=False))
+    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_tokens=10, ttl=4))
+    done = engine.run()
+    assert done[0].state is RequestState.EXPIRED
+    assert "slot evicted" in done[0].error
+    # partial progress retained: prefill token + decode ticks 2..4
+    assert 1 <= len(done[0].output) < 10
+    assert engine.fault_stats["expired_requests"] == 1
+
+
+def test_queued_doomed_request_expires_early(small_model):
+    """A queued request whose remaining slack is below its service time is
+    expired immediately (doomed — every token would be late) instead of
+    wasting a slot."""
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32)
+    engine.submit(Request(rid=0, prompt=[1, 2], max_tokens=6))   # hogs slot
+    engine.submit(Request(rid=1, prompt=[3, 4], max_tokens=6, ttl=3))
+    done = {r.rid: r for r in engine.run()}
+    assert done[0].state is RequestState.DONE
+    assert done[1].state is RequestState.EXPIRED
+    assert "infeasible" in done[1].error
+    assert done[1].output == []                # never reached a slot
+
+
+def test_stale_deadline_expires_as_passed(small_model):
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32)
+    engine.submit(Request(rid=0, prompt=[1, 2], max_tokens=2))
+    engine.run()                               # advances the tick clock
+    engine.submit(Request(rid=1, prompt=[3, 4], max_tokens=2, deadline=1))
+    done = engine.run()
+    assert done[0].state is RequestState.EXPIRED
+    assert "passed in queue" in done[0].error
+
+
+def test_priority_preemption_and_resume(small_model):
+    """A deadline-critical high-priority arrival preempts the running
+    low-priority request; the victim resumes later (prompt + partial
+    output replayed) and its final output equals an uninterrupted run."""
+    cfg, model, params = small_model
+
+    def run_with_prod(submit_prod):
+        engine = InferenceEngine(model, params, max_slots=1, max_len=32)
+        batch = Request(rid=0, prompt=[1, 2, 3], max_tokens=8, priority=0)
+        engine.submit(batch)
+        engine.step()                          # batch takes the only slot
+        prod = None
+        if submit_prod:
+            prod = Request(rid=1, prompt=[4, 5, 6], max_tokens=4,
+                           priority=2, ttl=6)
+            engine.submit(prod)
+        engine.run()
+        return engine, batch, prod
+
+    _, undisturbed, _ = run_with_prod(False)
+    engine, batch, prod = run_with_prod(True)
+    assert prod.state is RequestState.DONE
+    assert prod.finish_tick <= prod.deadline   # preemption saved the SLO
+    assert batch.state is RequestState.DONE
+    assert batch.preemptions == 1
+    assert batch.output == undisturbed.output  # resume == uninterrupted
+    assert engine.fault_stats["preemptions"] == 1
+    assert engine.fault_stats["by_tenant"]["default"]["preempted"] == 1
+
+
+def test_no_preemption_of_equal_or_higher_priority(small_model):
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32)
+    first = Request(rid=0, prompt=[1, 2, 3], max_tokens=8, priority=2)
+    engine.submit(first)
+    engine.step()
+    engine.submit(Request(rid=1, prompt=[4, 5], max_tokens=4, priority=2,
+                          ttl=5))
+    done = {r.rid: r for r in engine.run()}
+    assert engine.fault_stats["preemptions"] == 0
+    assert done[0].state is RequestState.DONE and done[0].preemptions == 0
+
+
+# =========================================================================
+# Engine lifecycle: drain / health
+# =========================================================================
+
+def test_drain_closes_admission_and_finishes_inflight(small_model):
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=2, max_len=32)
+    engine.submit(Request(rid=0, prompt=[1, 2], max_tokens=3))
+    done = engine.drain()
+    assert done[0].state is RequestState.DONE
+    assert not engine.accepting
+    late = Request(rid=1, prompt=[3, 4], max_tokens=3)
+    engine.submit(late)
+    assert late.state is RequestState.SHED
+    assert "draining" in late.error
+    assert late in engine.run()                # still reported, not lost
+
+
+def test_health_snapshot(small_model):
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=2, max_len=32)
+    engine.submit(Request(rid=0, prompt=[1, 2], max_tokens=6, tenant="a"))
+    engine.submit(Request(rid=1, prompt=[3, 4], max_tokens=6, tenant="b"))
+    engine.submit(Request(rid=2, prompt=[5, 6], max_tokens=6, tenant="b"))
+    engine.step()                              # admit rid=0
+    engine.step()                              # admit rid=1
+    h = engine.health()
+    assert h["tick"] == 2 and h["accepting"]
+    assert h["running"] == 2 and h["free_slots"] == 0
+    assert h["queued"] == 1 and h["queued_by_tenant"] == {"b": 1}
+    assert h["compiled_decode"] is True
+    assert h["fault_stats"]["by_tenant"]["b"]["submitted"] == 2
+    # snapshot is detached — mutating it must not touch live counters
+    h["fault_stats"]["shed_requests"] = 99
+    assert engine.fault_stats["shed_requests"] == 0
+
+
+def test_tenant_sessions_collect_isolated_provenance(small_model):
+    from repro.core import Session
+
+    cfg, model, params = small_model
+    sessions = {"a": Session(), "b": Session()}
+    engine = InferenceEngine(
+        model, params, max_slots=1, max_len=32,
+        admission=AdmissionConfig(max_queue=1),
+        tenant_sessions=sessions)
+    engine.submit(Request(rid=0, prompt=[1, 2], max_tokens=3, tenant="a"))
+    engine.submit(Request(rid=1, prompt=[3, 4], max_tokens=3, tenant="b"))
+    engine.submit(Request(rid=2, prompt=[5, 6], max_tokens=3, tenant="b"))
+    engine.run()
+    # both of tenant b's sheds landed on b's guard_log ONLY (rid=0 filled
+    # the bounded queue before any tick could admit it to a slot)
+    assert len(sessions["a"].guard_log) == 0
+    events = sessions["b"].guard_log.as_dicts()
+    assert len(events) == 2
+    assert all(e["site"] == "admission_enqueue" for e in events)
+    assert all(e["action"] == "admit->shed" for e in events)
+
+
+# =========================================================================
+# Watchdog probation rung (satellite)
+# =========================================================================
+
+def test_watchdog_probation_retries_jitted_step(small_model):
+    cfg, model, params = small_model
+
+    def run(fault_plan, probation):
+        engine = InferenceEngine(model, params, max_slots=1, max_len=32,
+                                 fault_plan=fault_plan,
+                                 watchdog_probation=probation)
+        req = Request(rid=0, prompt=[1, 2, 3], max_tokens=8)
+        engine.submit(req)
+        engine.run()
+        return engine, req
+
+    _, clean = run(None, probation=2)
+    plan = FaultPlan.single("decode_step", mode="raise", times=1)
+    with pytest.warns(UserWarning, match="decode watchdog"):
+        engine, req = run(plan, probation=2)
+    assert engine._use_compiled is True        # probation un-latched
+    assert engine.fault_stats["watchdog_fallbacks"] == 1
+    assert engine.fault_stats["watchdog_probations"] == 1
+    assert req.output == clean.output          # eager == jitted tokens
+
+
+def test_watchdog_probation_relatches_on_persistent_fault(small_model):
+    cfg, model, params = small_model
+    plan = FaultPlan.single("decode_step", mode="raise", times=-1)
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32,
+                             fault_plan=plan, watchdog_probation=2)
+    req = Request(rid=0, prompt=[1, 2, 3], max_tokens=10)
+    engine.submit(req)
+    with pytest.warns(UserWarning, match="decode watchdog"):
+        done = engine.run()
+    assert done[0].state is RequestState.DONE  # still drained eagerly
+    assert engine.fault_stats["watchdog_fallbacks"] >= 2   # re-latched
+    assert engine.fault_stats["watchdog_probations"] >= 1
+
+
+def test_watchdog_probation_zero_latches_forever(small_model):
+    cfg, model, params = small_model
+    plan = FaultPlan.single("decode_step", mode="raise", times=1)
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32,
+                             fault_plan=plan, watchdog_probation=0)
+    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_tokens=10))
+    with pytest.warns(UserWarning, match="decode watchdog"):
+        engine.run()
+    assert engine._use_compiled is False       # PR 6 behavior preserved
+    assert engine.fault_stats["watchdog_probations"] == 0
+
+
+# =========================================================================
+# Multi-slot admission determinism (satellite)
+# =========================================================================
+
+def _overload_trace():
+    specs = []
+    for rid in range(9):
+        specs.append(dict(rid=rid, prompt=[1 + rid, 2, 3], max_tokens=4,
+                          tenant=f"t{rid % 3}", priority=rid % 3,
+                          ttl=8 + 2 * (rid % 4) if rid % 2 else None))
+    return specs
+
+
+def _run_overload(model, params, compiled=True):
+    engine = InferenceEngine(
+        model, params, max_slots=2, max_len=32,
+        admission=AdmissionConfig(max_queue=4, tenant_quota=3),
+        watchdog_probation=0)
+    if not compiled:
+        engine._use_compiled = False           # force the eager decode rung
+    reqs = [Request(**spec) for spec in _overload_trace()]
+    for i, r in enumerate(reqs):
+        engine.submit(r)
+        if i % 3 == 2:
+            engine.step()                      # staggered burst
+    engine.run(max_ticks=64)
+    decisions = [(r.rid, r.state.value, tuple(r.output), r.error,
+                  r.preemptions, r.finish_tick) for r in reqs]
+    return engine, decisions
+
+
+def test_admission_determinism_compiled_and_eager(small_model):
+    """Same (seed, arrival order, deadlines) → byte-identical outputs and
+    identical shed/expire/preempt decisions, replayed twice under the
+    compiled decode step and twice under the eager one."""
+    cfg, model, params = small_model
+    e1, d1 = _run_overload(model, params, compiled=True)
+    e2, d2 = _run_overload(model, params, compiled=True)
+    assert d1 == d2                            # replay is bit-identical
+    e3, d3 = _run_overload(model, params, compiled=False)
+    e4, d4 = _run_overload(model, params, compiled=False)
+    assert d3 == d4
+    assert d1 == d3                            # compiled == eager decisions
+    s1, s3 = e1.fault_stats, e3.fault_stats
+    for key in ("shed_requests", "expired_requests", "preemptions"):
+        assert s1[key] == s3[key]
+    assert s1["by_tenant"] == s3["by_tenant"]
+
+
+def test_overload_trace_all_terminal_with_fault_sites_armed(small_model):
+    """Acceptance: overload trace × all three admission fault sites armed →
+    zero crashes, every request terminal, queue + slots drained."""
+    from repro.runtime import faults
+
+    cfg, model, params = small_model
+    plan = FaultPlan.parse(
+        "admission_enqueue:raise:2;slot_preempt:raise:1;deadline_check:raise:3")
+    with faults.activate(plan):
+        engine, decisions = _run_overload(model, params)
+    assert all(state in {s.value for s in TERMINAL_STATES}
+               for _, state, *_ in decisions)
+    assert len(engine.admission) == 0
+    assert all(s is None for s in engine.slots)
+    assert engine.fault_stats["admission_faults"] == 2
+    assert engine.fault_stats["deadline_faults"] == 3
+
+
+# =========================================================================
+# Goodput vs FIFO (bench acceptance, shrunk)
+# =========================================================================
+
+def test_admission_goodput_beats_fifo_baseline(small_model):
+    from benchmarks.bench_serving import build_trace, measure
+
+    cfg, model, params = small_model
+    trace = build_trace(n=12, seed=7)
+    fifo = InferenceEngine(
+        model, params, max_slots=2, max_len=64,
+        admission=AdmissionConfig(policy="fifo", preemption=False,
+                                  expire_queued=False, expire_running=False))
+    fifo_row = measure(fifo, trace, "fifo")
+    edf = InferenceEngine(
+        model, params, max_slots=2, max_len=64,
+        admission=AdmissionConfig(max_queue=6, tenant_quota=5))
+    edf_row = measure(edf, trace, "edf")
+    assert edf_row["goodput_tok_per_tick"] > fifo_row["goodput_tok_per_tick"]
+    assert edf_row["deadline_miss_rate"] <= fifo_row["deadline_miss_rate"]
+
+
+def test_ttl_resolves_to_absolute_deadline_at_submit(small_model):
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=1, max_len=32)
+    engine.submit(Request(rid=0, prompt=[1, 2], max_tokens=2))
+    engine.run()
+    tick = engine.tick
+    req = Request(rid=1, prompt=[3, 4], max_tokens=2, ttl=10)
+    engine.submit(req)
+    assert req.deadline == tick + 10 and req.submit_tick == tick
