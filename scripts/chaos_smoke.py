@@ -232,6 +232,59 @@ def check_preempt_site() -> None:
     _check_all_terminal(engine, {0: batch, 1: prod}, "slot_preempt")
 
 
+def _paged_run():
+    """Burst trace against the paged-KV engine (small pages so every request
+    spans several; preemption exercises the keep-pages/resume path).
+    Returns (engine, {rid: request}) after every request went terminal."""
+    from repro.serving import AdmissionConfig, InferenceEngine, Request
+
+    cfg, model, params = _serve_model()
+    engine = InferenceEngine(
+        model, params, max_slots=2, max_len=32,
+        admission=AdmissionConfig(max_queue=4, preemption=True),
+        paged_kv=True, page_size=4)
+    reqs = []
+    for rid in range(6):                          # burst: 6 at once, 2 slots
+        reqs.append(Request(
+            rid=rid, prompt=[1 + rid, 2, 3, 4], max_tokens=4,
+            tenant=f"t{rid % 2}", priority=rid % 3,
+            ttl=12 + 2 * rid if rid % 2 else None))
+        engine.submit(reqs[-1])
+    engine.run(max_ticks=64)
+    return engine, {r.rid: r for r in reqs}
+
+
+def check_paged_site(site: str) -> None:
+    """Paged-KV overload with a page-tier fault armed: no crash, no stranded
+    request, the fault counted, DONE outputs equal the fault-free run, and
+    the pool's books balance (every non-leaked page back on the free list)."""
+    from repro.serving import RequestState
+
+    with _disarmed():
+        _, clean = _paged_run()
+    engine, done = _paged_run()
+    _check_all_terminal(engine, done, site)
+    counter = {"page_alloc": "page_alloc_faults",
+               "block_table_build": "block_table_faults",
+               "page_release": "page_release_faults"}[site]
+    assert engine.fault_stats[counter] >= 1, \
+        f"site={site}: fault not counted ({engine.fault_stats})"
+    for rid, r in done.items():
+        if r.state is RequestState.DONE \
+                and clean[rid].state is RequestState.DONE:
+            assert r.output == clean[rid].output, \
+                f"site={site}: rid={rid} outputs diverged"
+    leaked = engine.pool.stats["leaked_pages"]
+    assert engine.pool.used_pages == leaked, \
+        f"site={site}: pool books off (used={engine.pool.used_pages}, " \
+        f"leaked={leaked})"
+    if site == "page_release":
+        assert leaked >= 1, f"site={site}: failed release did not leak"
+    if site == "block_table_build":
+        assert engine.fault_stats["paged_decode_fallbacks"] >= 1, \
+            f"site={site}: dense-gather rung not taken"
+
+
 class _disarmed:
     def __enter__(self):
         self._saved = os.environ.pop(ENV_VAR, None)
@@ -258,11 +311,17 @@ SCENARIOS = [
     ("deadline_check:raise:-1",
      lambda: check_overload_site("deadline_check")),
     ("slot_preempt:raise:-1", check_preempt_site),
+    # paged-KV tier: burst trace × each page fault site
+    ("page_alloc:raise:2", lambda: check_paged_site("page_alloc")),
+    ("block_table_build:raise:1",
+     lambda: check_paged_site("block_table_build")),
+    ("page_release:raise:1", lambda: check_paged_site("page_release")),
 ]
 
 # scenarios that spin up the (slower) serving engine — skipped by --skip-engine
 _ENGINE_SITES = ("decode_step", "admission_enqueue", "deadline_check",
-                 "slot_preempt")
+                 "slot_preempt", "page_alloc", "block_table_build",
+                 "page_release")
 
 
 def main(argv=None) -> int:

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import interpret_mode
+from ...runtime.guard import note_kernel_fallback
 from .kernel import decode_attention_pallas
 from .ref import decode_attention_ref
 
@@ -12,6 +13,13 @@ from .ref import decode_attention_ref
 def decode_attention(q, k, v, valid, bk: int = 512):
     t, d = k.shape[2], q.shape[-1]
     if t % 128 or d % 8:
+        # off-lattice shapes cannot tile the TPU kernel — the einsum ref is
+        # the recovery rung.  This fires at trace time (shapes are static),
+        # so the count is per route decision, not per decode step.
+        note_kernel_fallback(
+            "decode_attention", "pallas->ref",
+            f"off-lattice decode shapes T={t}, D={d} "
+            "(need T%128==0, D%8==0); einsum reference")
         return decode_attention_ref(q, k, v, valid)
     bk = min(bk, t)
     while t % bk:

@@ -1,0 +1,113 @@
+"""Paged split-KV flash decoding: one query token against block-table pages.
+
+Same online-softmax structure as ``decode_attention`` (grid walks KV blocks
+innermost, fp32 VMEM running max/sum/accumulator), but K/V live in physical
+pages addressed through a **scalar-prefetched block table** — the
+``PrefetchScalarGridSpec`` pattern of ``grouped_gemm``: the index map of the
+K/V operands reads ``bt[b * MAXP + p]`` so the DMA for logical page ``p``
+of sequence ``b`` streams the right physical page while page ``p-1``'s
+matmul runs.  Nothing is ever gathered into a contiguous slab.
+
+    q:  [B, H, Dk]          k: [P, KVH, ps, Dk]     v: [P, KVH, ps, Dv]
+    bt: [B*MAXP] int32      starts, lengths: [B] int32   →   out: [B, H, Dv]
+
+Grid: (B, H, MAXP), pages innermost (sequential accumulation).  Masking is
+positional (``starts <= pos < lengths``), so trailing table entries may
+point anywhere (the engine points them at the reserved null page 0).
+``Dv != Dk`` is supported — the MLA absorbed variant attends latent pages
+``[ckv ‖ kpe]`` with ``Dk = rank + rope`` and ``Dv = rank``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, starts_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, page_size: int):
+    del bt_ref  # consumed by the K/V index maps
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                       # [1, Dk] row block
+    k = k_ref[0, 0]                                    # [ps, Dk]
+    v = v_ref[0, 0]                                    # [ps, Dv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    posn = pi * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                  # absolute positions
+    ok = (posn >= starts_ref[b]) & (posn < lengths_ref[b])
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pi == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention_pallas(
+    q: jax.Array,            # [B, H, Dk]
+    k: jax.Array,            # [P, KVH, ps, Dk]
+    v: jax.Array,            # [P, KVH, ps, Dv]
+    block_tables: jax.Array,  # [B * MAXP] int32 (flattened)
+    starts: jax.Array,       # [B] int32
+    lengths: jax.Array,      # [B] int32
+    scale: float,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, dk = q.shape
+    _, kvh, ps, _ = k.shape
+    dv = v.shape[-1]
+    groups = h // kvh
+    maxp = block_tables.shape[0] // b
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, dk),
+                         lambda bb, hh, pp, bt, st, ln: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, ps, dk),
+                         lambda bb, hh, pp, bt, st, ln, g=groups, mp=maxp:
+                         (bt[bb * mp + pp], hh // g, 0, 0)),
+            pl.BlockSpec((1, 1, ps, dv),
+                         lambda bb, hh, pp, bt, st, ln, g=groups, mp=maxp:
+                         (bt[bb * mp + pp], hh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv),
+                               lambda bb, hh, pp, bt, st, ln: (bb, hh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, scale=scale, page_size=ps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), starts.astype(jnp.int32),
+      lengths.astype(jnp.int32), q, k, v)

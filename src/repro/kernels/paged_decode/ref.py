@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for paged single-token decode attention.
+
+Layout contract (the engine/page-pool layout — write-friendly scatter at
+``(page, offset)``):
+
+    q:            [B, H, Dk]        one query token per sequence
+    k_pages:      [P, ps, KVH, Dk]  physical KV pages (page 0 = null page)
+    v_pages:      [P, ps, KVH, Dv]  Dv may differ from Dk (MLA latent)
+    block_tables: [B, MAXP] int32   logical page i of seq b -> physical page
+    lengths:      [B] int32         attendable positions: [starts, lengths)
+    starts:       [B] int32 | None  window lower bound (None -> 0)
+
+Out-of-range table entries simply point at the null page; masking is purely
+positional, so the gather never needs bounds logic.
+"""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               starts=None, scale=None):
+    """Gather-then-mask einsum reference → [B, H, Dv]."""
+    b, h, dk = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    maxp = block_tables.shape[1]
+    groups = h // kvh
+    scale = dk ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(b, maxp * ps, kvh, dk)
+    v = v_pages[block_tables].reshape(b, maxp * ps, kvh, dv)
+    posn = jnp.arange(maxp * ps)[None, :]                # [1, T']
+    valid = posn < lengths[:, None]
+    if starts is not None:
+        valid &= posn >= starts[:, None]
+    # numerics mirror _sdpa (models/attention.py) term for term — bf16
+    # operands, fp32 accumulation, probabilities cast back to the value
+    # dtype — so paged and dense decode emit identical token streams.
+    qg = q.reshape(b, kvh, groups, dk)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, dv).astype(q.dtype)

@@ -514,6 +514,109 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig, use_kernels=False):
     return y, new_cache
 
 
+# -- paged decode (block-table KV) --------------------------------------------
+
+def gqa_paged_decode(p, x, pages, block_tables, pos, cfg: ModelConfig,
+                     window=None, use_kernels=False):
+    """One-token decode against paged KV. x: [B,1,d]; pages: (k,v)
+    [P,ps,KVH,D]; block_tables: [B,MAXP] int32; pos: [B] int.
+
+    Writes the new K/V at ``(table[pos//ps], pos%ps)`` and attends positions
+    ``[max(0, pos-window+1), pos]`` through the block table — there is no
+    per-sequence dense slab.  ``window`` may be the traced sentinel
+    (>= 2^29 disables): the start clamp maps it to 0.
+    """
+    k_pages, v_pages = pages
+    ps = k_pages.shape[1]
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(b, 1, h, hd)
+    k = linear(p["wk"], x).reshape(b, 1, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, 1, kvh, hd)
+    if cfg.rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    rows = jnp.arange(b)
+    page = block_tables[rows, pos // ps]                # [B] physical pages
+    off = pos % ps
+    k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype))
+    lengths = (pos + 1).astype(jnp.int32)
+    starts = None
+    if window is not None:
+        starts = jnp.clip(pos - window + 1, 0).astype(jnp.int32)
+    if use_kernels:
+        from ..kernels.paged_decode.ops import paged_decode_attention
+        out = paged_decode_attention(q[:, 0], k_pages, v_pages, block_tables,
+                                     lengths, starts)
+    else:
+        from ..kernels.paged_decode.ref import paged_decode_attention_ref
+        out = paged_decode_attention_ref(q[:, 0], k_pages, v_pages,
+                                         block_tables, lengths, starts)
+    y = linear(p["wo"], out.reshape(b, 1, h * hd))
+    return y, (k_pages, v_pages)
+
+
+def mla_paged_decode(p, x, pages, block_tables, pos, cfg: ModelConfig,
+                     use_kernels=False):
+    """Paged MLA decode over latent pages (ckv [P,ps,rank], kpe [P,ps,rope])
+    via matrix absorption — see :func:`mla_attention` for the math."""
+    m = cfg.mla
+    ckv_pages, kpe_pages = pages
+    ps = ckv_pages.shape[1]
+    b = x.shape[0]
+    h, rank = cfg.n_heads, m.kv_lora_rank
+    q_nope, q_rope, c_new, r_new = _mla_qkv(p, x, cfg, pos[:, None])
+    rows = jnp.arange(b)
+    page = block_tables[rows, pos // ps]
+    off = pos % ps
+    ckv_pages = ckv_pages.at[page, off].set(c_new[:, 0].astype(ckv_pages.dtype))
+    kpe_pages = kpe_pages.at[page, off].set(r_new[:, 0].astype(kpe_pages.dtype))
+    lengths = (pos + 1).astype(jnp.int32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    wk_b = p["wk_b"]["w"].reshape(rank, h, m.qk_nope_head_dim)
+    if use_kernels:
+        from ..kernels.paged_decode.ops import paged_mla_decode_attention
+        lat = paged_mla_decode_attention(q_nope[:, 0], q_rope[:, 0], ckv_pages,
+                                         kpe_pages, wk_b, block_tables,
+                                         lengths, scale)
+    else:
+        from ..kernels.paged_decode.ref import paged_decode_attention_ref
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        q_cat = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)
+        k_cat = jnp.concatenate([ckv_pages, kpe_pages], axis=-1)[:, :, None, :]
+        lat = paged_decode_attention_ref(q_cat, k_cat, ckv_pages[:, :, None, :],
+                                         block_tables, lengths, None, scale)
+    wv_b = p["wv_b"]["w"].reshape(rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", lat, wv_b,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    y = linear(p["wo"], out.reshape(b, 1, h * m.v_head_dim))
+    return y, (ckv_pages, kpe_pages)
+
+
+def attn_paged_decode(p, x, pages, block_tables, pos, cfg, window=None,
+                      use_kernels=False):
+    if cfg.mla is not None:
+        return mla_paged_decode(p, x, pages, block_tables, pos, cfg, use_kernels)
+    return gqa_paged_decode(p, x, pages, block_tables, pos, cfg, window,
+                            use_kernels)
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int, dtype=None):
+    """Single-layer paged KV pages (page 0 reserved as the null page).
+
+    MLA always pages the *compressed* latent cache (no int8 variant — the
+    engine gates ``kv_quant`` off the paged path)."""
+    dtype = dtype or cfg.dtype
+    if cfg.mla is not None:
+        m = cfg.mla
+        return (jnp.zeros((num_pages, page_size, m.kv_lora_rank), dtype),
+                jnp.zeros((num_pages, page_size, m.qk_rope_head_dim), dtype))
+    return (jnp.zeros((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dtype),
+            jnp.zeros((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dtype))
+
+
 # -- dispatch -----------------------------------------------------------------
 
 def init_attention(key, cfg: ModelConfig):

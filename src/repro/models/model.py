@@ -57,6 +57,19 @@ class Model:
             return ed.encdec_decode(params, token, caches, pos, self.cfg, self.use_kernels)
         return tf.lm_decode(params, token, caches, pos, self.cfg, self.use_kernels)
 
+    # -- paged decode ------------------------------------------------------------
+    def supports_paged(self) -> bool:
+        """Paged KV applies to pure-attention decoder stacks only (recurrent
+        state — ssm/hybrid — and encdec cross-attention stay dense)."""
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def init_paged_caches(self, num_pages: int, page_size: int):
+        return tf.init_paged_decode_caches(self.cfg, num_pages, page_size)
+
+    def paged_decode(self, params, token, caches, block_tables, pos):
+        return tf.lm_paged_decode(params, token, caches, block_tables, pos,
+                                  self.cfg, self.use_kernels)
+
     # -- dry-run input specs -----------------------------------------------------
     def input_specs(self, cell: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
         """ShapeDtypeStruct stand-ins for every model input of this cell."""

@@ -24,7 +24,14 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..utils import shard
-from .attention import attn_decode, attn_prefill, init_attention, init_cache
+from .attention import (
+    attn_decode,
+    attn_paged_decode,
+    attn_prefill,
+    init_attention,
+    init_cache,
+    init_paged_cache,
+)
 from .ffn import ffn, init_ffn
 from .layers import apply_norm, embed, init_embedding, init_norm, unembed
 from .ssm import (
@@ -403,6 +410,71 @@ def init_decode_caches(cfg: ModelConfig, batch: int, length: int):
                 }
             caches.append(entry)
     return caches
+
+
+def block_step_paged(p, x, pages, block_tables, pos, cfg: ModelConfig, window,
+                     layer_kind: str = "dense", use_kernels: bool = False):
+    """Single-token decode against paged KV. x: [B,1,d]; pages per layer."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    attn_out, new_pages = attn_paged_decode(p["attn"], h, pages, block_tables,
+                                            pos, cfg, window, use_kernels)
+    x = x + attn_out * cfg.residual_scale
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if layer_kind == "dense_prefix":
+        from .ffn import mlp
+        f_out = mlp(p["ffn"], h2, cfg.act)
+    else:
+        f_out, _ = ffn(p["ffn"], h2, cfg, None, use_kernels)
+    x = x + f_out * cfg.residual_scale
+    return x, new_pages
+
+
+def _scan_step_paged(stack_params, kind, windows, x, caches, block_tables, pos,
+                     cfg, use_kernels=False):
+    win_arr = jnp.array([w if w > 0 else (1 << 30) for w in windows], jnp.int32)
+
+    def body(x, xs):
+        p_l, win_l, cache_l = xs
+        x, new_cache = block_step_paged(p_l, x, cache_l, block_tables, pos,
+                                        cfg, win_l, kind, use_kernels)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stack_params, win_arr, caches))
+    return x, new_caches
+
+
+def init_paged_decode_caches(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Paged KV leaves [L, P, ps, ...] per stack.  Materialized with
+    ``jnp.zeros`` (not broadcast) so ``nbytes`` honestly reports the paged
+    footprint the serving bench compares against the dense slab."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"family {cfg.family!r} carries recurrent state; paged KV "
+            "applies only to pure-attention stacks")
+    caches = []
+    for kind, n, _ in stack_meta(cfg):
+        kv = init_paged_cache(cfg, num_pages, page_size)
+        caches.append(tuple(jnp.zeros((n,) + x.shape, x.dtype) for x in kv))
+    return caches
+
+
+def lm_paged_decode(params, token, caches, block_tables, pos,
+                    cfg: ModelConfig, use_kernels=False):
+    """One decode step over paged caches. token/pos: [B] int32;
+    block_tables: [B,MAXP] int32 (shared by every layer). → (logits, caches')."""
+    x = embed(params["embed"], token[:, None])
+    if cfg.meta_tokens:
+        pos = pos + cfg.meta_tokens
+    new_caches = []
+    for stack_params, cache, (kind, _, windows) in zip(
+            params["stacks"], caches, stack_meta(cfg)):
+        x, cache = _scan_step_paged(stack_params, kind, windows, x, cache,
+                                    block_tables, pos, cfg, use_kernels)
+        new_caches.append(cache)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x)[:, 0]
+    return logits, new_caches
 
 
 def lm_decode(params, token, caches, pos, cfg: ModelConfig, use_kernels=False):

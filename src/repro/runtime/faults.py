@@ -28,6 +28,15 @@ Injection sites (one per ladder rung):
                         mode skips the preemption; the victim keeps running)
 ``deadline_check``      the engine's per-tick deadline sweep (raise mode
                         skips ONE tick of expiry)
+``page_alloc``          the paged-KV pool's page grant (admission or
+                        decode-time growth; raise mode becomes page
+                        pressure — requeue/shed, never a crash)
+``block_table_build``   assembly of the device block-table for a paged
+                        decode tick (raise mode takes the tick down the
+                        dense-gather fallback rung)
+``page_release``        page release on request eviction (raise mode LEAKS
+                        the pages — counted and visible in ``health()`` —
+                        instead of corrupting the free list)
 ======================  ====================================================
 
 Activation is either **per-session** (``SessionConfig(fault_plan=...)``,
@@ -64,6 +73,9 @@ SITES = (
     "admission_enqueue",
     "slot_preempt",
     "deadline_check",
+    "page_alloc",
+    "block_table_build",
+    "page_release",
 )
 
 MODES = ("raise", "corrupt", "delay")

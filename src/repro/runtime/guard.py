@@ -72,6 +72,45 @@ class DegradationLog:
         return len(self.events)
 
 
+# =========================================================================
+# Process-wide kernel-fallback log
+# =========================================================================
+#
+# The kernel wrappers (kernels/*/ops.py) have no Session in scope — they are
+# called from inside jit traces by whoever composed the model.  Their route
+# decisions (off-lattice shapes, Pallas launch failures) used to be silent;
+# they now land here: counted always, warned once per site per process so a
+# serving loop cannot flood the log.  Notes fire at *trace* time, so each
+# count is one route decision (a compiled program keeps its route), not one
+# execution.
+
+_KERNEL_LOG = DegradationLog()
+_KERNEL_WARNED: set[str] = set()
+
+
+def kernel_log() -> DegradationLog:
+    """The process-wide :class:`DegradationLog` for session-less kernel
+    wrappers.  ``kernel_log().count("decode_attention")`` is the counter
+    the PR 6 ladder promises for every fallback."""
+    return _KERNEL_LOG
+
+
+def note_kernel_fallback(site: str, action: str, reason: str) -> Degradation:
+    """Record a kernel-wrapper fallback: always counted on
+    :func:`kernel_log`, announced via :class:`DegradationWarning` only on
+    the first event per site (per process)."""
+    warn = site not in _KERNEL_WARNED
+    _KERNEL_WARNED.add(site)
+    return _KERNEL_LOG.note(site, action, reason, warn=warn)
+
+
+def reset_kernel_log() -> None:
+    """Test hook: drop recorded kernel-fallback events and re-arm the
+    once-per-site warning."""
+    _KERNEL_LOG.events.clear()
+    _KERNEL_WARNED.clear()
+
+
 def retry_with_backoff(
     fn: Callable[[], Any],
     retries: int = 2,

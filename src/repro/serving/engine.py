@@ -55,6 +55,8 @@ from ..runtime.faults import get_active as _active_faults
 from ..runtime.guard import DegradationWarning
 from .admission import (AdmissionConfig, AdmissionQueue, Request,
                         RequestState, TERMINAL_STATES, deadline_critical)
+from .kv_pool import (KVPagePool, KVPoolConfig, PageExhausted,
+                      page_content_keys)
 from .sampler import sample_token
 
 __all__ = ["InferenceEngine", "Request", "RequestState", "AdmissionConfig",
@@ -91,6 +93,27 @@ def _cached_decode_fn(model: Model):
     return fn
 
 
+_PAGED_JIT_CACHE: "weakref.WeakKeyDictionary[Any, Any]" = weakref.WeakKeyDictionary()
+
+
+def _cached_paged_decode_fn(model: Model):
+    fn = _PAGED_JIT_CACHE.get(model)
+    if fn is None:
+        ref = weakref.ref(model)        # same weakref discipline as above
+
+        def _step(p, c, t, bt, pos):
+            m = ref()
+            if m is None:
+                raise RuntimeError(
+                    "paged decode step: model was garbage-collected; rebuild "
+                    "the InferenceEngine with a live model")
+            return m.paged_decode(p, t, c, bt, pos)
+
+        fn = jax.jit(_step)
+        _PAGED_JIT_CACHE[model] = fn
+    return fn
+
+
 def _empty_tenant_stats() -> dict[str, int]:
     return {"submitted": 0, "done": 0, "failed": 0, "shed": 0,
             "expired": 0, "preempted": 0}
@@ -102,7 +125,10 @@ class InferenceEngine:
                  session=None, fault_plan: FaultPlan | None = None,
                  admission: AdmissionConfig | None = None,
                  watchdog_probation: int = 8,
-                 tenant_sessions: Mapping[str, Any] | None = None):
+                 tenant_sessions: Mapping[str, Any] | None = None,
+                 paged_kv: bool = False, page_size: int = 16,
+                 num_pages: int | None = None, prefix_sharing: bool = False,
+                 page_bounce_limit: int = 8):
         self.model = model
         self.params = params
         # repro.core.Session owning this engine's schedule/calibration cache
@@ -128,6 +154,10 @@ class InferenceEngine:
                             "shed_requests": 0, "expired_requests": 0,
                             "preemptions": 0, "admission_faults": 0,
                             "preempt_faults": 0, "deadline_faults": 0,
+                            "page_exhaustions": 0, "page_alloc_faults": 0,
+                            "block_table_faults": 0, "page_release_faults": 0,
+                            "paged_decode_fallbacks": 0, "page_resumes": 0,
+                            "resumed_tokens": 0, "reprefilled_tokens": 0,
                             "by_tenant": {}}
         self.cfg: ModelConfig = model.cfg
         self.max_slots = max_slots
@@ -147,9 +177,48 @@ class InferenceEngine:
         self.slots: list[Request | None] = [None] * max_slots
         self.pos = np.zeros(max_slots, np.int32)
         self.last_token = np.zeros(max_slots, np.int32)
-        from ..models.transformer import init_decode_caches
-        cache_len = max_len + self.cfg.meta_tokens
-        self.caches = init_decode_caches(self.cfg, max_slots, cache_len)
+        # paged KV tier: fixed pages + block tables instead of a dense slab.
+        # Unsupported combinations degrade to the dense slab with provenance
+        # rather than erroring — the ladder's usual posture.
+        self.paged = False
+        self.prefix_sharing = prefix_sharing
+        self.page_bounce_limit = page_bounce_limit
+        self.pool: KVPagePool | None = None
+        if paged_kv:
+            reason = None
+            if not model.supports_paged():
+                reason = (f"family {self.cfg.family!r} carries recurrent or "
+                          "cross-attention state; paged KV needs a "
+                          "pure-attention decoder stack")
+            else:
+                from ..flags import kv_quant
+                if kv_quant() and self.cfg.mla is not None:
+                    reason = ("kv_quant int8 latent cache is dense-only; "
+                              "paged MLA pages the bf16 latent")
+            if reason is not None:
+                warnings.warn(f"paged_kv unavailable: {reason}; "
+                              "using the dense slab cache",
+                              DegradationWarning, stacklevel=2)
+                if self.session is not None:
+                    self.session.note_degradation(
+                        "paged_kv", "paged->dense", reason, warn=False)
+            else:
+                self.paged = True
+        if self.paged:
+            cache_len = max_len + self.cfg.meta_tokens
+            self._pages_per_req = -(-cache_len // page_size)
+            if num_pages is None:
+                # null page + a full allocation per slot (capacity parity
+                # with the dense slab; pass a smaller pool to overcommit)
+                num_pages = 1 + max_slots * self._pages_per_req
+            self.pool = KVPagePool(KVPoolConfig(num_pages, page_size))
+            self.caches = model.init_paged_caches(num_pages, page_size)
+            self._paged_decode = _cached_paged_decode_fn(model)
+            self._page_bounces: dict[str, int] = {}
+        else:
+            from ..models.transformer import init_decode_caches
+            cache_len = max_len + self.cfg.meta_tokens
+            self.caches = init_decode_caches(self.cfg, max_slots, cache_len)
         self._decode = _cached_decode_fn(model)
         # Measured-mode Opara schedule of this engine's step graph, filled by
         # calibrate_schedule().  Engines for the same (model structure, batch
@@ -244,6 +313,7 @@ class InferenceEngine:
         req.finish_tick = self.tick
         self.fault_stats["failed_requests"] += 1
         self._tenant_stats(req.tenant)["failed"] += 1
+        self._release_pages(req)
         return req
 
     def _shed(self, req: Request, reason: str) -> Request:
@@ -254,6 +324,7 @@ class InferenceEngine:
         self.fault_stats["shed_requests"] += 1
         self._tenant_stats(req.tenant)["shed"] += 1
         self._tenant_note(req, "admission_enqueue", "admit->shed", reason)
+        self._release_pages(req)
         return req
 
     def _expire(self, req: Request, reason: str) -> Request:
@@ -264,13 +335,40 @@ class InferenceEngine:
         self.fault_stats["expired_requests"] += 1
         self._tenant_stats(req.tenant)["expired"] += 1
         self._tenant_note(req, "deadline_check", "request->expired", reason)
+        self._release_pages(req)
         return req
 
     def _complete(self, req: Request) -> Request:
         req.state = RequestState.DONE
         req.finish_tick = self.tick
         self._tenant_stats(req.tenant)["done"] += 1
+        self._release_pages(req)
         return req
+
+    def _release_pages(self, req: Request) -> None:
+        """Free ``req``'s KV pages on ANY terminal transition (preemption is
+        not terminal — a preempted request keeps its pages and resumes
+        without re-prefill).  An injected ``page_release`` fault models a
+        lost free: the pages leak (counted, capacity shrinks) instead of
+        corrupting the free list."""
+        if not self.paged or not self.pool.holds(req.rid):
+            return
+        faults = self._faults()
+        if faults is not None:
+            try:
+                faults.fire("page_release")
+            except FaultInjected as exc:
+                self.fault_stats["page_release_faults"] += 1
+                n = self.pool.leak(req.rid)
+                reason = f"{exc}: {n} pages leaked"
+                self._tenant_note(req, "page_release", "release->leaked", reason)
+                if self.session is not None:
+                    self.session.note_degradation(
+                        "page_release", "release->leaked", reason, warn=False)
+                self._page_bounces.pop(req.rid, None)
+                return
+        self.pool.release(req.rid)
+        self._page_bounces.pop(req.rid, None)
 
     def _clear_slot(self, slot: int) -> None:
         self.slots[slot] = None
@@ -361,8 +459,15 @@ class InferenceEngine:
             "running": running,
             "free_slots": self.max_slots - running,
             "compiled_decode": self._use_compiled,
+            "paged": self.pool.health() if self.paged else None,
+            "kv_cache_bytes": self.kv_cache_bytes(),
             "fault_stats": copy.deepcopy(self.fault_stats),
         }
+
+    def kv_cache_bytes(self) -> int:
+        """Total bytes held by the KV cache (dense slab or page pool)."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.caches))
 
     # -- one tick -----------------------------------------------------------------
     def step(self) -> list[Request]:
@@ -376,7 +481,8 @@ class InferenceEngine:
             return out
         if not free and len(self.admission) and self.admission_cfg.preemption:
             out.extend(self._maybe_preempt())
-        out.extend(self._decode_tick())
+        out.extend(self._paged_decode_tick() if self.paged
+                   else self._decode_tick())
         return out
 
     def _work_pending(self) -> bool:
@@ -475,6 +581,13 @@ class InferenceEngine:
             return [self._fail(req, (
                 f"token stream length {len(tokens_list)} exceeds KV "
                 f"capacity (max_len={self.max_len}) at slot admission"))]
+        if self.paged:
+            return self._admit_paged(slot, req, tokens_list)
+        if req.output:
+            # a dense re-admission rebuilds the whole KV from scratch —
+            # count the re-prefilled tokens so the paged path's zero here
+            # is a measurable win, not an assertion
+            self.fault_stats["reprefilled_tokens"] += len(tokens_list)
         tokens = jnp.asarray([tokens_list], jnp.int32)
         try:
             logits, cache = self.model.prefill(
@@ -499,6 +612,280 @@ class InferenceEngine:
         self.pos[slot] = len(tokens_list)
         self.last_token[slot] = first
         return []
+
+    # -- paged KV path ------------------------------------------------------------
+    def _admit_paged(self, slot: int, req: Request,
+                     tokens_list: list[int]) -> list[Request]:
+        """Paged admission: allocate pages, prefill, scatter into pages.
+
+        A preempted request that still holds pages takes the resume
+        fast-path — no re-prefill, its KV never left the pool."""
+        if self.pool.holds(req.rid) and req.output:
+            return self._resume_paged(slot, req, tokens_list)
+        ps = self.pool.page_size
+        meta = self.cfg.meta_tokens
+        n_pos = len(tokens_list) + meta
+        had_output = bool(req.output)
+        faults = self._faults()
+        keys = None
+        shared = 0
+        if self.prefix_sharing and not req.output:
+            keys = page_content_keys(self.cfg.name, ps, tokens_list, meta)
+            shared = self.pool.adopt_shared(req.rid, keys, req.tenant)
+        try:
+            if faults is not None:
+                faults.fire("page_alloc")
+            self.pool.ensure(req.rid, n_pos, req.tenant)
+        except FaultInjected as exc:
+            self.fault_stats["page_alloc_faults"] += 1
+            return self._page_pressure(req, f"{exc}")
+        except PageExhausted as exc:
+            self.fault_stats["page_exhaustions"] += 1
+            return self._page_pressure(req, str(exc))
+        tokens = jnp.asarray([tokens_list], jnp.int32)
+        try:
+            # page-aligned dense intermediate so the scatter below covers
+            # every written position without bounds logic
+            logits, cache = self.model.prefill(
+                self.params, {"tokens": tokens},
+                cache_len=self._pages_per_req * ps)
+        except Exception as exc:
+            return [self._fail(req, f"prefill failed: {exc!r}")]
+        if not bool(np.isfinite(np.asarray(logits)).all()):
+            return [self._fail(req, "prefill produced non-finite logits")]
+        self.rng, sub = jax.random.split(self.rng)
+        first = int(sample_token(logits, sub, req.temperature)[0])
+        req.output.append(first)
+        if had_output:
+            self.fault_stats["reprefilled_tokens"] += len(tokens_list)
+        if (req.eos_id is not None and first == req.eos_id) \
+                or len(req.output) >= req.max_tokens:
+            return [self._complete(req)]
+        self._scatter_pages(req, cache, n_pos, skip_pages=shared)
+        if keys is not None:
+            self.pool.publish_keys(req.rid, keys)
+        self.slots[slot] = req
+        self.pos[slot] = len(tokens_list)
+        self.last_token[slot] = first
+        return []
+
+    def _resume_paged(self, slot: int, req: Request,
+                      tokens_list: list[int]) -> list[Request]:
+        """Resume a preempted request from its retained pages: restore slot
+        state and decode ONE token (the tick a dense engine would spend
+        re-prefilling).  Other slots' page writes during the batched step
+        are value-identical to next tick's — idempotent."""
+        pos_i = len(tokens_list) - 1
+        wp = pos_i + self.cfg.meta_tokens
+        faults = self._faults()
+        try:
+            if faults is not None:
+                faults.fire("page_alloc")
+            self.pool.ensure(req.rid, wp + 1, req.tenant)
+            page, copy_src = self.pool.writable_page(req.rid, wp)
+        except FaultInjected as exc:
+            self.fault_stats["page_alloc_faults"] += 1
+            return self._page_pressure(req, f"{exc}")
+        except PageExhausted as exc:
+            self.fault_stats["page_exhaustions"] += 1
+            return self._page_pressure(req, str(exc))
+        if copy_src is not None:
+            self._copy_page(page, copy_src)
+        self.slots[slot] = req
+        self.pos[slot] = pos_i
+        self.last_token[slot] = tokens_list[-1]
+        token = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.pos)
+        logits = None
+        try:
+            if faults is not None:
+                faults.fire("block_table_build")
+            bt = jnp.asarray(self._block_table_array())
+            logits, caches = self._paged_decode(self.params, self.caches,
+                                                token, bt, pos)
+            self.caches = caches
+        except Exception as exc:
+            logits = self._paged_fallback(exc)
+            if logits is None:
+                self._clear_slot(slot)
+                return [self._fail(
+                    req, f"paged resume decode failed: {exc!r}")]
+        if not bool(np.isfinite(np.asarray(logits[slot])).all()):
+            self._clear_slot(slot)
+            return [self._fail(req, "resume decode produced non-finite logits")]
+        self.rng, sub = jax.random.split(self.rng)
+        nxt = int(sample_token(logits[slot:slot + 1], sub,
+                               req.temperature)[0])
+        req.output.append(nxt)
+        self.fault_stats["page_resumes"] += 1
+        self.fault_stats["resumed_tokens"] += len(tokens_list)
+        hit_eos = req.eos_id is not None and nxt == req.eos_id
+        if hit_eos or len(req.output) >= req.max_tokens \
+                or pos_i + 1 >= self.max_len - 1:
+            self._clear_slot(slot)
+            return [self._complete(req)]
+        self.pos[slot] = pos_i + 1
+        self.last_token[slot] = nxt
+        return []
+
+    def _page_pressure(self, req: Request, reason: str) -> list[Request]:
+        """Page exhaustion / allocation fault: release what the request
+        held and feed it back to the admission tier (the queue's shed and
+        quota machinery owns the overload decision).  A request that
+        bounces past ``page_bounce_limit`` — or that cannot fit even an
+        empty pool — is shed."""
+        self.pool.release(req.rid)       # direct: pressure, not a fault site
+        bounces = self._page_bounces.get(req.rid, 0) + 1
+        self._page_bounces[req.rid] = bounces
+        if bounces > self.page_bounce_limit or not self.pool.holders():
+            self._page_bounces.pop(req.rid, None)
+            return [self._shed(req, (
+                f"page pressure: {reason} "
+                f"(bounced {bounces}x, limit {self.page_bounce_limit})"))]
+        req.state = RequestState.PENDING
+        self._tenant_note(req, "page_alloc", "running->requeued", reason)
+        admitted, shed, shed_reason = self.admission.offer(req, self.tick)
+        return [self._shed(victim, f"page pressure requeue: {shed_reason}")
+                for victim in shed]
+
+    def _scatter_pages(self, req: Request, cache, n_pos: int,
+                       skip_pages: int = 0) -> None:
+        """Scatter a batch-1 dense prefill cache into this request's pages
+        (skipping pages adopted via prefix sharing — already resident)."""
+        ps = self.pool.page_size
+        table = np.asarray(self.pool.table(req.rid), np.int32)
+        positions = np.arange(skip_pages * ps, n_pos)
+        if positions.size == 0:
+            return
+        pages = table[positions // ps]
+        offs = positions % ps
+
+        def scat(paged_leaf, dense_leaf):
+            return paged_leaf.at[:, pages, offs].set(
+                dense_leaf[:, 0, positions].astype(paged_leaf.dtype))
+
+        self.caches = jax.tree_util.tree_map(scat, self.caches, cache)
+
+    def _copy_page(self, dst: int, src: int) -> None:
+        """Copy-on-write materialization: duplicate page ``src`` into the
+        freshly allocated ``dst`` across every layer's leaves."""
+        self.caches = jax.tree_util.tree_map(
+            lambda leaf: leaf.at[:, dst].set(leaf[:, src]), self.caches)
+
+    def _block_table_array(self) -> np.ndarray:
+        """[max_slots, pages_per_req] int32; unused entries point at the
+        null page 0 (decode masks by length, never by table bounds)."""
+        bt = np.zeros((self.max_slots, self._pages_per_req), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            table = self.pool.table(req.rid)
+            bt[i, :len(table)] = table[:self._pages_per_req]
+        return bt
+
+    def _paged_decode_tick(self) -> list[Request]:
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return []
+        out: list[Request] = []
+        faults = self._faults()
+        still = []
+        for i in active:
+            req = self.slots[i]
+            wp = int(self.pos[i]) + self.cfg.meta_tokens
+            try:
+                if faults is not None:
+                    faults.fire("page_alloc")
+                self.pool.ensure(req.rid, wp + 1, req.tenant)
+                page, copy_src = self.pool.writable_page(req.rid, wp)
+            except FaultInjected as exc:
+                self.fault_stats["page_alloc_faults"] += 1
+                self._clear_slot(i)
+                out.extend(self._page_pressure(req, f"{exc}"))
+                continue
+            except PageExhausted as exc:
+                self.fault_stats["page_exhaustions"] += 1
+                self._clear_slot(i)
+                out.extend(self._page_pressure(req, str(exc)))
+                continue
+            if copy_src is not None:
+                self._copy_page(page, copy_src)
+            still.append(i)
+        if not still:
+            return out
+        token = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.pos)
+        logits = None
+        try:
+            if faults is not None:
+                faults.fire("block_table_build")
+            bt = jnp.asarray(self._block_table_array())
+            logits, caches = self._paged_decode(self.params, self.caches,
+                                                token, bt, pos)
+            if faults is not None:
+                logits = faults.fire("decode_step", payload=logits)
+            self.caches = caches
+        except Exception as exc:
+            logits = self._paged_fallback(exc)
+            if logits is None:
+                for i in still:
+                    req = self.slots[i]
+                    self._clear_slot(i)
+                    out.append(self._fail(
+                        req, f"paged decode failed on both rungs: {exc!r}"))
+                return out
+        out.extend(self._advance_slots(still, logits))
+        return out
+
+    def _paged_fallback(self, exc: Exception):
+        """Ladder rung ``paged_decode → dense-gather``: gather the pages
+        into a contiguous slab and run the eager dense decode step.  Returns
+        logits, or None when the rescue rung itself failed."""
+        if isinstance(exc, FaultInjected):
+            self.fault_stats["block_table_faults"] += 1
+        self.fault_stats["paged_decode_fallbacks"] += 1
+        warnings.warn(
+            f"paged decode failed ({exc!r}); falling back to the "
+            "dense-gather decode step", DegradationWarning, stacklevel=3)
+        if self.session is not None:
+            self.session.note_degradation(
+                "paged_decode", "paged->dense-gather", repr(exc), warn=False)
+        try:
+            return self._dense_gather_decode()
+        except Exception:
+            return None
+
+    def _dense_gather_decode(self):
+        """Gather every slot's pages into a dense [L,B,T,...] slab, run the
+        eager dense decode, scatter ONLY the newly written position back
+        into the pages.  Built without firing fault sites — the rescue rung
+        must not re-inject."""
+        bt_np = self._block_table_array()
+        bt = jnp.asarray(bt_np)
+        maxp, ps = self._pages_per_req, self.pool.page_size
+
+        def gather(leaf):
+            g = leaf[:, bt]                      # [L, B, MAXP, ps, ...]
+            return g.reshape(g.shape[0], g.shape[1], maxp * ps, *g.shape[4:])
+
+        dense = jax.tree_util.tree_map(gather, self.caches)
+        logits, new_dense = self.model.decode(
+            self.params, jnp.asarray(self.last_token), dense,
+            jnp.asarray(self.pos))
+        rows = [i for i, r in enumerate(self.slots) if r is not None]
+        if rows:
+            wp = np.array([int(self.pos[i]) + self.cfg.meta_tokens
+                           for i in rows], np.int32)
+            pages = bt_np[rows, wp // ps]
+            offs = wp % ps
+            rows_a = np.array(rows, np.int32)
+
+            def scat(paged_leaf, dense_leaf):
+                return paged_leaf.at[:, pages, offs].set(
+                    dense_leaf[:, rows_a, wp].astype(paged_leaf.dtype))
+
+            self.caches = jax.tree_util.tree_map(scat, self.caches, new_dense)
+        return logits
 
     def _decode_tick(self) -> list[Request]:
         active = [i for i, s in enumerate(self.slots) if s is not None]
@@ -563,6 +950,11 @@ class InferenceEngine:
                             "decode_step", "eager->jitted (probation)",
                             f"{self.watchdog_probation} clean eager ticks; "
                             "retrying the jitted decode step", warn=False)
+        return self._advance_slots(active, logits)
+
+    def _advance_slots(self, active: list[int], logits) -> list[Request]:
+        """Per-slot sampling/completion tail shared by the dense and paged
+        decode ticks (identical rng discipline → identical token streams)."""
         finite_rows = np.isfinite(np.asarray(logits)).all(axis=-1)
         self.rng, sub = jax.random.split(self.rng)
         finished: list[Request] = []

@@ -31,12 +31,15 @@ def _fresh_default_session(tmp_path, monkeypatch):
       arms it per-invocation, but the regular suite must always see the
       fault-free path unless a test arms a plan explicitly."""
     from repro.core.session import reset_default_session
+    from repro.runtime.guard import reset_kernel_log
 
     monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
     monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
     reset_default_session()
+    reset_kernel_log()
     yield
     reset_default_session()
+    reset_kernel_log()
 
 
 @contextlib.contextmanager

@@ -14,7 +14,7 @@ from repro.models import make_model
 @pytest.fixture
 def clean_env():
     keys = ["REPRO_CACHE_UPDATE", "REPRO_CHUNKED_CE", "REPRO_CAUSAL_SKIP",
-            "REPRO_WINDOW_SLICE_DECODE"]
+            "REPRO_WINDOW_SLICE_DECODE", "REPRO_KV_QUANT"]
     saved = {k: os.environ.pop(k, None) for k in keys}
     yield
     for k, v in saved.items():

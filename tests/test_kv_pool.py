@@ -1,0 +1,200 @@
+"""KV page pool: deterministic allocation, ref-count/COW correctness,
+per-tenant accounting, exhaustion semantics, content-key chaining."""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import (KVPagePool, KVPoolConfig, PageExhausted,
+                                   page_content_keys)
+
+
+def mk(num_pages=9, page_size=4):
+    return KVPagePool(KVPoolConfig(num_pages=num_pages, page_size=page_size))
+
+
+def test_null_page_reserved_and_lowest_first():
+    pool = mk()
+    table = pool.ensure("a", 9)          # 3 pages of 4 positions
+    assert table == [1, 2, 3]            # page 0 never handed out; min-heap order
+    assert pool.used_pages == 3
+    assert pool.free_pages == 5
+
+
+def test_ensure_is_incremental_and_idempotent():
+    pool = mk()
+    assert pool.ensure("a", 3) == [1]
+    assert pool.ensure("a", 4) == [1]    # still fits one page
+    assert pool.ensure("a", 5) == [1, 2]
+    assert pool.stats["allocs"] == 2
+
+
+def test_release_returns_pages_in_order():
+    pool = mk()
+    pool.ensure("a", 8)                  # pages 1,2
+    pool.ensure("b", 4)                  # page 3
+    assert pool.release("a") == 2
+    assert not pool.holds("a")
+    # freed pages are reused lowest-first: deterministic replay
+    assert pool.ensure("c", 8) == [1, 2]
+    assert pool.release("c") == 2
+    assert pool.release("b") == 1
+    assert pool.used_pages == 0
+
+
+def test_double_free_is_hard_error():
+    pool = mk()
+    pool.ensure("a", 4)
+    assert pool.release("a") == 1
+    assert pool.release("a") == 0        # re-release of a dropped rid: no-op
+    with pytest.raises(RuntimeError, match="double free"):
+        pool._decref(1)                  # freeing an already-free page
+
+
+def test_all_or_nothing_exhaustion():
+    pool = mk(num_pages=4)               # 3 usable pages
+    pool.ensure("a", 8)                  # 2 pages
+    with pytest.raises(PageExhausted):
+        pool.ensure("b", 8)              # needs 2, only 1 free
+    # nothing was allocated for b — no half-mapped request
+    assert not pool.holds("b")
+    assert pool.free_pages == 1
+    assert pool.stats["exhaustions"] == 1
+    # a grown request that fails keeps its existing pages
+    with pytest.raises(PageExhausted):
+        pool.ensure("a", 20)
+    assert pool.table("a") == [1, 2]
+
+
+def test_per_tenant_accounting():
+    pool = mk()
+    pool.ensure("a", 8, tenant="prod")
+    pool.ensure("b", 4, tenant="batch")
+    pool.ensure("c", 4, tenant="prod")
+    assert pool.tenant_pages("prod") == 3
+    assert pool.tenant_pages("batch") == 1
+    pool.release("a")
+    assert pool.tenant_pages("prod") == 1
+    h = pool.health()
+    assert h["tenant_pages"] == {"prod": 1, "batch": 1}
+    pool.release("b")
+    pool.release("c")
+    assert pool.health()["tenant_pages"] == {}
+
+
+def test_prefix_adoption_and_refcounts():
+    pool = mk()
+    keys = page_content_keys("m", 4, [1, 2, 3, 4, 5, 6, 7, 8], 0)
+    assert len(keys) == 2
+    pool.ensure("a", 8, tenant="prod")
+    pool.publish_keys("a", keys)
+    n = pool.adopt_shared("b", keys, tenant="batch")
+    assert n == 2
+    assert pool.table("b") == pool.table("a")
+    # shared pages count once per holder
+    assert pool.tenant_pages("batch") == 2
+    assert pool.used_pages == 2          # physically still two pages
+    # releasing one holder keeps the pages alive for the other
+    assert pool.release("a") == 0
+    assert pool.used_pages == 2
+    assert pool.release("b") == 2
+    assert pool.used_pages == 0
+
+
+def test_adoption_stops_at_first_miss():
+    pool = mk()
+    keys_a = page_content_keys("m", 4, [1, 2, 3, 4, 9, 9, 9, 9], 0)
+    keys_b = page_content_keys("m", 4, [1, 2, 3, 4, 5, 5, 5, 5], 0)
+    assert keys_a[0] == keys_b[0]        # same first page
+    assert keys_a[1] != keys_b[1]        # diverging second page
+    pool.ensure("a", 8)
+    pool.publish_keys("a", keys_a)
+    assert pool.adopt_shared("b", keys_b) == 1
+    pool.ensure("b", 8)                  # second page allocated fresh
+    assert pool.table("b")[0] == pool.table("a")[0]
+    assert pool.table("b")[1] != pool.table("a")[1]
+
+
+def test_cow_on_shared_write():
+    pool = mk()
+    keys = page_content_keys("m", 4, [1, 2, 3, 4, 5, 6], 0)
+    pool.ensure("a", 6)
+    pool.publish_keys("a", keys)
+    pool.adopt_shared("b", keys)
+    # position 5 lives in the shared partial page → the writer copies
+    page, src = pool.writable_page("b", 5)
+    assert src is not None
+    assert pool.stats["cow_copies"] == 1
+    assert pool.table("b")[1] != pool.table("a")[1]
+    # the original keeps its page exclusively now
+    page2, src2 = pool.writable_page("a", 5)
+    assert src2 is None
+    pool.release("a")
+    pool.release("b")
+    assert pool.used_pages == 0
+
+
+def test_freed_shared_page_unpublishes_its_key():
+    pool = mk()
+    keys = page_content_keys("m", 4, [1, 2, 3, 4], 0)
+    pool.ensure("a", 4)
+    pool.publish_keys("a", keys)
+    pool.release("a")
+    assert pool.adopt_shared("b", keys) == 0   # key gone with the page
+
+
+def test_leak_keeps_pages_resident():
+    pool = mk()
+    pool.ensure("a", 8, tenant="prod")
+    assert pool.leak("a") == 2
+    assert pool.stats["leaked_pages"] == 2
+    assert pool.used_pages == 2          # capacity lost
+    assert not pool.holds("a")
+    assert pool.tenant_pages("prod") == 0
+
+
+def test_deterministic_replay_under_seeded_trace():
+    """The same request trace replays to the same page map bit-for-bit."""
+    rng = np.random.default_rng(42)
+    events = []
+    live = []
+    for i in range(120):
+        if live and rng.random() < 0.4:
+            events.append(("release", live.pop(int(rng.integers(len(live))))))
+        else:
+            rid = f"r{i}"
+            live.append(rid)
+            events.append(("ensure", rid, int(rng.integers(1, 20))))
+
+    def replay():
+        pool = mk(num_pages=40, page_size=4)
+        snap = []
+        for ev in events:
+            if ev[0] == "ensure":
+                try:
+                    snap.append(tuple(pool.ensure(ev[1], ev[2])))
+                except PageExhausted:
+                    snap.append(("exhausted", ev[1]))
+            else:
+                snap.append(("freed", ev[1], pool.release(ev[1])))
+        h = pool.health()
+        snap.append(tuple(sorted(
+            (k, tuple(sorted(v.items())) if isinstance(v, dict) else v)
+            for k, v in h.items())))
+        return snap
+
+    assert replay() == replay()
+
+
+def test_content_keys_chained_and_meta_aware():
+    k1 = page_content_keys("m", 4, [1, 2, 3, 4, 5, 6, 7, 8], 0)
+    k2 = page_content_keys("m", 4, [9, 2, 3, 4, 5, 6, 7, 8], 0)
+    assert k1[0] != k2[0]
+    assert k1[1] != k2[1]                # chaining: later pages diverge too
+    # meta tokens shift the stream: same prompt, different keys
+    k3 = page_content_keys("m", 4, [1, 2, 3, 4, 5, 6, 7, 8], 2)
+    assert k3[0] != k1[0]
+    # partial last page gets a fill-tagged key distinct from the full page
+    k4 = page_content_keys("m", 4, [1, 2, 3, 4, 5], 0)
+    assert len(k4) == 2 and k4[0] == k1[0] and k4[1] != k1[1]
+    # model identity is part of the chain seed
+    assert page_content_keys("other", 4, [1, 2, 3, 4], 0) != \
+        page_content_keys("m", 4, [1, 2, 3, 4], 0)

@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import make_model
-from repro.serving import InferenceEngine, Request
+from repro.runtime import DegradationWarning
+from repro.serving import InferenceEngine, Request, RequestState
 from repro.serving.sampler import sample_token
 
 
@@ -158,3 +159,210 @@ def test_sampler_modes():
     assert int(t[0]) in (1, 2)
     t = sample_token(logits, jax.random.key(0), temperature=1.0, top_p=0.5)
     assert int(t[0]) == 1
+
+
+# =========================================================================
+# Paged KV cache (tentpole): differential vs the dense slab
+# =========================================================================
+
+def _terminal_map(done):
+    return {r.rid: (r.state, tuple(r.output)) for r in done}
+
+
+def test_paged_engine_matches_dense_on_overload_trace(small_model):
+    """Byte-identical token streams: same trace, same admission policy, same
+    seed — the paged engine must emit exactly what the dense engine does,
+    through preemptions, sheds and expiries."""
+    from benchmarks.bench_serving import _drive, build_trace
+    from repro.serving import AdmissionConfig
+
+    cfg, model, params = small_model
+    trace = build_trace(n=12, seed=7)
+
+    def run(paged):
+        engine = InferenceEngine(
+            model, params, max_slots=2, max_len=64, seed=3,
+            admission=AdmissionConfig(policy="edf", preemption=True),
+            paged_kv=paged, page_size=16)
+        done = _drive(engine, trace)
+        return engine, _terminal_map(done)
+
+    dense_engine, dense = run(False)
+    paged_engine, paged = run(True)
+    assert paged_engine.paged
+    assert paged == dense
+    # every page returned to the pool once the trace drained
+    assert paged_engine.pool.used_pages == 0
+    assert paged_engine.health()["paged"]["holders"] == 0
+
+
+def test_paged_resume_skips_reprefill(small_model):
+    """A preempted paged request keeps its pages and resumes without
+    re-prefilling; the dense engine re-runs the whole prefix."""
+    from repro.serving import AdmissionConfig
+
+    cfg, model, params = small_model
+
+    def run(paged):
+        engine = InferenceEngine(
+            model, params, max_slots=1, max_len=32, seed=5,
+            admission=AdmissionConfig(policy="edf", preemption=True),
+            paged_kv=paged, page_size=4)
+        low = Request(rid="low", prompt=[5, 6, 7], max_tokens=12, priority=0)
+        engine.submit(low)
+        for _ in range(4):
+            engine.step()
+        engine.submit(Request(rid="hi", prompt=[9, 9], max_tokens=3,
+                              priority=3, ttl=4))
+        done = engine.run(200)
+        return engine, _terminal_map(done)
+
+    dense_engine, dense = run(False)
+    paged_engine, paged = run(True)
+    assert paged == dense
+    assert dense_engine.fault_stats["preemptions"] == 1
+    assert paged_engine.fault_stats["preemptions"] == 1
+    # dense pays a full re-prefill of prompt+output on resume; paged resumes
+    # from its retained pages
+    assert dense_engine.fault_stats["reprefilled_tokens"] > 0
+    assert paged_engine.fault_stats["reprefilled_tokens"] == 0
+    assert paged_engine.fault_stats["page_resumes"] == 1
+    assert paged_engine.fault_stats["resumed_tokens"] > 0
+    assert paged_engine.pool.used_pages == 0
+
+
+def test_page_exhaustion_feeds_admission(small_model):
+    """An undersized pool sheds/requeues instead of corrupting state: every
+    request goes terminal and the pool drains."""
+    from repro.serving import TERMINAL_STATES
+
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=3, max_len=32, seed=2,
+                             paged_kv=True, page_size=4, num_pages=6)
+    reqs = [Request(rid=f"r{i}", prompt=[7, 8, 9, 1, 2], max_tokens=10)
+            for i in range(4)]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run(300)
+    assert len(done) == 4
+    assert all(r.state in TERMINAL_STATES for r in reqs)
+    assert sum(r.state is RequestState.DONE for r in reqs) >= 1
+    assert engine.fault_stats["page_exhaustions"] > 0
+    assert engine.pool.used_pages == 0
+
+
+def test_prefix_sharing_cow_is_transparent(small_model):
+    """Two requests with the same prompt share prefix pages; COW keeps the
+    token streams identical to the unshared run."""
+    cfg, model, params = small_model
+    prompt = [3, 1, 4, 1, 5, 9]
+
+    def run(sharing):
+        engine = InferenceEngine(model, params, max_slots=2, max_len=32,
+                                 seed=11, paged_kv=True, page_size=4,
+                                 prefix_sharing=sharing)
+        engine.submit(Request(rid="a", prompt=list(prompt), max_tokens=6))
+        engine.submit(Request(rid="b", prompt=list(prompt), max_tokens=6))
+        done = engine.run(200)
+        return engine, _terminal_map(done)
+
+    plain_engine, plain = run(False)
+    shared_engine, shared = run(True)
+    assert shared == plain
+    assert plain_engine.pool.stats["shared_hits"] == 0
+    assert shared_engine.pool.stats["shared_hits"] > 0
+    # the shared partial page is copied before either writer extends it
+    assert shared_engine.pool.stats["cow_copies"] >= 1
+    assert shared_engine.pool.used_pages == 0
+
+
+def test_block_table_fault_lands_on_dense_gather_rung(small_model):
+    """An injected block-table fault degrades the tick to the dense-gather
+    rung — same outputs as the fault-free run, provenance recorded."""
+    from repro.runtime.faults import FaultPlan
+
+    cfg, model, params = small_model
+
+    def run(spec):
+        plan = FaultPlan.parse(spec) if spec else None
+        engine = InferenceEngine(model, params, max_slots=2, max_len=32,
+                                 seed=3, paged_kv=True, page_size=4,
+                                 fault_plan=plan)
+        for i in range(3):
+            engine.submit(Request(rid=f"r{i}", prompt=[4, 5, 6, 7],
+                                  max_tokens=5))
+        done = engine.run(200)
+        return engine, _terminal_map(done)
+
+    clean_engine, clean = run(None)
+    with pytest.warns(DegradationWarning, match="dense-gather"):
+        faulty_engine, faulty = run("block_table_build:raise:1")
+    assert faulty == clean
+    assert all(s[0] is RequestState.DONE for s in faulty.values())
+    assert faulty_engine.fault_stats["block_table_faults"] == 1
+    assert faulty_engine.fault_stats["paged_decode_fallbacks"] == 1
+
+
+def test_page_release_fault_leaks_with_provenance(small_model):
+    """A failed release leaks the pages (counted, capacity lost) instead of
+    double-freeing or corrupting the free list."""
+    from repro.runtime.faults import FaultPlan
+
+    cfg, model, params = small_model
+    engine = InferenceEngine(model, params, max_slots=2, max_len=32, seed=3,
+                             paged_kv=True, page_size=4,
+                             fault_plan=FaultPlan.parse("page_release:raise:1"))
+    for i in range(3):
+        engine.submit(Request(rid=f"r{i}", prompt=[4, 5, 6, 7], max_tokens=5))
+    done = engine.run(200)
+    assert all(r.state is RequestState.DONE for r in done)
+    assert engine.fault_stats["page_release_faults"] == 1
+    leaked = engine.pool.stats["leaked_pages"]
+    assert leaked > 0
+    assert engine.pool.used_pages == leaked        # resident but unheld
+
+
+def test_paged_matches_dense_on_mla_moe_smoke():
+    """The MLA latent-page path (DeepSeek-style) emits the same streams as
+    the dense engine."""
+    cfg = get_config("deepseek-v3-671b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def run(paged):
+        engine = InferenceEngine(model, params, max_slots=2, max_len=32,
+                                 seed=9, paged_kv=paged, page_size=4)
+        engine.submit(Request(rid="a", prompt=[3, 17, 42, 9], max_tokens=5))
+        engine.submit(Request(rid="b", prompt=[11, 2], max_tokens=5))
+        return _terminal_map(engine.run(200))
+
+    assert run(True) == run(False)
+
+
+def test_paged_kv_bytes_beat_dense_when_overcommitted(small_model):
+    """Sizing the pool below slot capacity parity is the memory win: the
+    paged cache is strictly smaller at equal max_slots."""
+    cfg, model, params = small_model
+    dense = InferenceEngine(model, params, max_slots=4, max_len=64)
+    pages_per_req = -(-(64 + cfg.meta_tokens) // 16)
+    paged = InferenceEngine(model, params, max_slots=4, max_len=64,
+                            paged_kv=True, page_size=16,
+                            num_pages=1 + 2 * pages_per_req)
+    assert paged.kv_cache_bytes() < dense.kv_cache_bytes()
+    assert dense.health()["paged"] is None
+    assert paged.health()["paged"]["free_pages"] == 2 * pages_per_req
+
+
+def test_paged_unsupported_family_degrades_to_dense():
+    """A recurrent-state family cannot page; the engine says so once and
+    serves on the dense slab."""
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    with pytest.warns(DegradationWarning, match="paged_kv unavailable"):
+        engine = InferenceEngine(model, params, max_slots=1, max_len=32,
+                                 paged_kv=True)
+    assert not engine.paged
+    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_tokens=3))
+    done = engine.run(100)
+    assert done[0].state is RequestState.DONE
