@@ -14,41 +14,11 @@ import numpy as np
 from repro.core.graph import OpCost, OpGraph, OpKind
 from repro.core.profiler import elementwise_cost, gather_cost, gemm_cost, norm_cost
 
+# the streamed-weight cost vocabulary is shared with the config-arch exporter
+# (models/opgraph_export) — one definition, identical pricing everywhere
+from repro.models.export_costs import act_gemm_cost, stream_cost, streamed_ff
 
-def stream_cost(nbytes: float) -> OpCost:
-    """Weight-prefetch DMA (HBM→VMEM): pure read traffic, no flops.
-
-    DESIGN.md §2: on TPU the weights of a large layer stream into VMEM; a
-    stream whose transfer time exceeds the kernel floor is an explicitly
-    schedulable memory op (the scheduler overlaps it with compute — the
-    paper's compute/memory overlap, Fig. 3), while smaller weights hide
-    behind the preceding kernel and stay folded into the GEMM cost.
-    """
-    return OpCost(flops=0.0, bytes_read=float(nbytes), bytes_written=0.0,
-                  vmem_bytes=float(min(nbytes, 8 * 2**20)))
-
-
-def act_gemm_cost(m: int, k: int, n: int, dtype_bytes: int = 2) -> OpCost:
-    """GEMM whose weight traffic is carried by a separate stream op: only
-    activation bytes count against HBM (the weight sits in VMEM by the time
-    the kernel fires)."""
-    base = gemm_cost(m, k, n, dtype_bytes)
-    return OpCost(flops=base.flops,
-                  bytes_read=float(m * k * dtype_bytes),
-                  bytes_written=base.bytes_written,
-                  vmem_bytes=base.vmem_bytes,
-                  occupancy=base.occupancy)
-
-
-def _streamed_ff(g: OpGraph, name: str, inp: int, root: int,
-                 m: int, k: int, n: int, fuse: tuple | None = None) -> int:
-    """FF-projection pair: weight-stream DMA (off the critical path, rooted
-    at the graph input so the scheduler may prefetch arbitrarily early) +
-    activation-roofline GEMM."""
-    w = g.add(f"{name}_wstream", OpKind.GATHER, [root],
-              cost=stream_cost(k * n * 2))
-    return g.add(name, OpKind.GEMM, [inp, w], cost=act_gemm_cost(m, k, n),
-                 fuse_sig=fuse)
+_streamed_ff = streamed_ff
 
 
 def conv_cost(h: int, w: int, cin: int, cout: int, k: int, batch: int = 1):

@@ -100,6 +100,35 @@ def check_graph_site(site: str, ragged: bool = False) -> None:
     assert reported >= 1, f"site={site}: degradation not reported ({stats})"
 
 
+def check_arch_differential_site(site: str) -> None:
+    """The differential harness on a real exporter-built arch graph
+    (glm4 2L: decomposed attention stages with (w, b) bias consts,
+    weight-streamed FFN folded into matmul-marked GEMMs) with a capture
+    fault armed: the compiled pipeline must degrade, not diverge."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.models.opgraph_export import build_lm_opgraph
+
+    cfg = dataclasses.replace(get_config("glm4-9b", smoke=True),
+                              dtype=jnp.float32)
+    params = make_model(cfg).init(jax.random.key(0))
+    g = build_lm_opgraph(cfg, batch=1, seq=4, params=params, n_layers=2)
+    tokens = jnp.asarray([[3, 1, 4, 1]], jnp.int32)
+    inputs = {"tokens": tokens}
+    ref = run_sequential_uncompiled(g, inputs)
+    calib = {n.op_id: tokens for n in g if n.fn is None}
+    sess = Session(SessionConfig(gemm_kernel="pallas"))
+    model = sess.compile(g, inputs=calib)
+    _assert_matches(model(inputs), ref, f"site={site} arch=glm4-9b")
+    stats = sess.cache_stats()
+    assert stats["degraded_routes"] >= 1, \
+        f"site={site}: degradation not reported ({stats})"
+
+
 _SERVE_MODEL = None
 
 
@@ -298,6 +327,8 @@ SCENARIOS = [
     ("kernel_compile:raise:-1", lambda: check_graph_site("kernel_compile")),
     ("grouped_gemm_route:raise:-1",
      lambda: check_graph_site("grouped_gemm_route", ragged=True)),
+    ("kernel_compile:raise:-1",
+     lambda: check_arch_differential_site("kernel_compile")),
     ("calibration_measure:raise:-1",
      lambda: check_graph_site("calibration_measure")),
     ("calib_disk_read:raise:-1", lambda: check_graph_site("calib_disk_read")),

@@ -7,12 +7,24 @@ Stream Allocator / Operator Launcher schedule REAL model topologies, and the
 Graph Capturer can execute them (used by benchmarks + examples with
 smoke-size weights).
 
+Every arch family exports at *traced-kernel* granularity (the bert/t5
+treatment from ``benchmarks/workloads.py``): attention is decomposed into
+head-split transpose copies → score GEMM → scale+mask → softmax → context
+GEMM → head-merge, and large FF weights become explicit weight-stream DMA
+ops on the cost-only path — so the memory-intensive stages the paper
+overlaps with compute (Fig. 3) are individually schedulable instead of
+hidden inside monolithic attention nodes.  See docs/scheduling.md
+("Export granularity") for the per-arch stage table.
+
 Payload functions close over concrete weights when ``params`` is given;
 otherwise nodes are cost-only (for scheduling/simulation at production
-scale, where we never allocate).
+scale, where we never allocate).  Payload-backed exports keep a SINGLE
+graph input (weights ride in ``meta["consts"]``), so the differential
+harness can replay them op-by-op.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
@@ -21,13 +33,16 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..core.graph import OpGraph, OpKind
 from ..core.profiler import (
-    attention_cost,
     elementwise_cost,
     gather_cost,
     gemm_cost,
     norm_cost,
     scan_cost,
 )
+from .attention import NEG_INF, causal_window_mask
+from .export_costs import act_gemm_cost, stream_cost
+from .layers import apply_norm, apply_rope, gelu
+from .ssm import mamba_scan_ref, wkv_scan_ref
 from .transformer import stack_meta
 
 
@@ -43,7 +58,8 @@ def _w(params, *path):
 def build_lm_opgraph(cfg: ModelConfig, batch: int, seq: int,
                      params: Any = None, n_layers: int | None = None,
                      moe_branch_cap: int = 16,
-                     moe_dispatch: str = "auto") -> OpGraph:
+                     moe_dispatch: str = "auto",
+                     moe_cap_scale: float = 1.0) -> OpGraph:
     """Operator DAG of an LM forward pass (prefill semantics).
 
     ``n_layers`` trims depth (graph-size control for schedulers/benchmarks);
@@ -57,20 +73,25 @@ def build_lm_opgraph(cfg: ModelConfig, batch: int, seq: int,
     combine — executable end to end whenever ``params`` is threaded.
     ``"auto"`` (default) uses ragged with params and uniform without, so
     cost-only scheduling benchmarks keep their historical topology.
+
+    ``moe_cap_scale`` scales the static per-expert capacities of the ragged
+    fan-out; values < 1 force genuine capacity overflow (routed pairs whose
+    within-expert rank exceeds capacity contribute zero), the production
+    sort-dispatch semantics the differential harness pins.
     """
     if moe_dispatch not in ("auto", "ragged", "uniform"):
         raise ValueError(f"unknown moe_dispatch {moe_dispatch!r}")
     g = OpGraph(cfg.name)
-    d, dt = cfg.d_model, 2
+    d = cfg.d_model
     b, s = batch, seq
     L = n_layers if n_layers is not None else cfg.n_layers
 
     def fn_or_none(f):
         return f if params is not None else None
 
-    x = g.add("tokens", OpKind.INPUT, out_shape=(b, s))
+    root = g.add("tokens", OpKind.INPUT, out_shape=(b, s))
     emb_w = _w(params, "embed", "table")
-    x = g.add("embed", OpKind.GATHER, [x],
+    x = g.add("embed", OpKind.GATHER, [root],
               fn=fn_or_none(lambda t: jnp.take(emb_w, t, axis=0)),
               cost=gather_cost(b * s, d), out_shape=(b, s, d))
 
@@ -82,21 +103,20 @@ def build_lm_opgraph(cfg: ModelConfig, batch: int, seq: int,
             pl = (jax.tree_util.tree_map(lambda a: a[li], _w(params, "stacks")[si])
                   if params is not None else None)
             if kind == "rwkv":
-                x = _rwkv_layer(g, cfg, x, b, s, tag, pl)
+                x = _rwkv_layer(g, cfg, x, b, s, tag, pl, root)
             elif kind == "hybrid":
                 x = _hybrid_layer(g, cfg, x, b, s, tag, pl,
-                                  windows[li] or s)
+                                  windows[li] or None, root)
             elif kind in ("moe",):
-                x = _dense_layer(g, cfg, x, b, s, tag, pl, moe=True,
+                x = _dense_layer(g, cfg, x, b, s, tag, pl, root, moe=True,
                                  moe_branch_cap=moe_branch_cap,
-                                 moe_dispatch=moe_dispatch)
+                                 moe_dispatch=moe_dispatch,
+                                 moe_cap_scale=moe_cap_scale)
             else:
-                x = _dense_layer(g, cfg, x, b, s, tag, pl, moe=False)
+                x = _dense_layer(g, cfg, x, b, s, tag, pl, root, moe=False)
             layer_idx += 1
-    fn = _w(params, "final_norm")
-    x = g.add("final_norm", OpKind.NORM, [x],
-              fn=fn_or_none(lambda h: _rms(fn, h)),
-              cost=norm_cost(b * s * d))
+    x = _norm_node(g, "final_norm", x, _w(params, "final_norm"), cfg.norm,
+                   b * s * d)
     head = _w(params, "embed" if cfg.tie_embeddings else "head")
     g.add("logits", OpKind.GEMM, [x],
           fn=fn_or_none(lambda h: jnp.einsum("bsd,vd->bsv", h, head["table"])),
@@ -111,8 +131,14 @@ def _rms(p, h, eps=1e-6):
     return (hf * jax.lax.rsqrt(v + eps) * p["scale"].astype(jnp.float32)).astype(h.dtype)
 
 
-def _lin(p, h):
-    return jnp.einsum("...i,io->...o", h, p["w"]) + (p.get("b", 0) if p else 0)
+def _norm_node(g, name, inp, p, kind, numel, out_shape=None):
+    """Pre/post-norm node.  ``out_shape`` should be declared wherever the
+    graph mixes sequence lengths (encoder vs decoder): capture's stacking
+    check can only veto a mixed-shape fusion group it can SEE (see
+    ``capture._can_stack``)."""
+    return g.add(name, OpKind.NORM, [inp],
+                 fn=(lambda h: apply_norm(p, h, kind)) if p is not None else None,
+                 cost=norm_cost(numel), out_shape=out_shape)
 
 
 def _matmul(h, w):
@@ -152,60 +178,275 @@ def _gemm_node(g, name, inp, pl_linear, m, k, n, bias: bool = False,
                  out_shape=out_shape, payload="matmul")
 
 
-def _dense_layer(g, cfg, x, b, s, tag, pl, moe: bool, moe_branch_cap: int = 16,
-                 moe_dispatch: str = "auto"):
+def _ffn_gemm(g, name, inp, root, pl_linear, m, k, n, bias: bool = False,
+              fuse_sig=None, out_shape=None):
+    """Large FF projection.  Cost-only exports split it into a
+    weight-stream DMA (GATHER rooted at the graph input, prefetchable
+    arbitrarily early) + an activation-roofline GEMM — the paper's
+    compute/memory-overlap pair.  Payload-backed exports keep the single
+    matmul-marked node (one graph input; the weight rides in ``consts``),
+    mirroring the ``moe_dispatch="auto"`` topology-split precedent.
+    """
+    if pl_linear is not None:
+        return _gemm_node(g, name, inp, pl_linear, m, k, n, bias,
+                          fuse_sig=fuse_sig, out_shape=out_shape)
+    w = g.add(f"{name}_wstream", OpKind.GATHER, [root],
+              cost=stream_cost(k * n * 2))
+    return g.add(name, OpKind.GEMM, [inp, w], cost=act_gemm_cost(m, k, n),
+                 fuse_sig=fuse_sig if fuse_sig is not None
+                 else ("gemm", k, n, bias),
+                 out_shape=out_shape)
+
+
+# -- decomposed attention core -----------------------------------------------
+#
+# Numerics mirror attention._sdpa exactly on head-major tensors: fp32
+# logits/softmax, probabilities cast to V's dtype for the context matmul.
+# Stage payloads are module-level / lru-cached so identical stages across
+# layers share one fn object and stack into fused kernels at capture.
+
+@functools.lru_cache(maxsize=None)
+def _make_split_heads(heads: int):
+    def split_heads(x):
+        b, s, dd = x.shape
+        return x.reshape(b, s, heads, dd // heads).transpose(0, 2, 1, 3)
+    return split_heads
+
+
+def _scores_payload(q, k):
+    """q: [B,H,S,Dk] head-major; k: [B,KVH,T,Dk] → logits [B,H,S,T] fp32."""
+    b, nh, s, hd = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    qg = q.reshape(b, kvh, nh // kvh, s, hd)
+    return jnp.einsum("bkgsd,bktd->bkgst", qg, k,
+                      preferred_element_type=jnp.float32).reshape(b, nh, s, t)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_scale_mask(scale: float, window: int | None, causal: bool):
+    def scale_mask(x):
+        s, t = x.shape[-2], x.shape[-1]
+        x = x * scale
+        if causal:
+            m = causal_window_mask(jnp.arange(s), jnp.arange(t), window)
+            x = jnp.where(m, x, NEG_INF)
+        return x
+    return scale_mask
+
+
+def _softmax_payload(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def _ctx_payload(p, v):
+    """p: [B,H,S,T] fp32 probs; v: [B,KVH,T,Dv] → ctx [B,H,S,Dv]."""
+    b, nh, s, t = p.shape
+    kvh, dv = v.shape[1], v.shape[-1]
+    pg = p.reshape(b, kvh, nh // kvh, s, t).astype(v.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", pg, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, nh, s, dv).astype(v.dtype)
+
+
+def _merge_heads(x):
+    b, nh, s, dv = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, nh * dv)
+
+
+def _attn_core(g, pre, qt, kt, vt, b, s, t, nh, kvh, hd, dv,
+               scale, causal, window, with_fn):
+    """scores → scale+mask → softmax → ctx → head-merge, from head-major
+    Q/K/V nodes.  The scores/ctx pair carries exactly the 4·b·h·s·t·d
+    attention FLOPs (2·m·k·n each); mask/softmax are the memory-bound
+    stages the scheduler overlaps with neighboring GEMMs."""
+    def F(f):
+        return f if with_fn else None
+    sc = g.add(f"{pre}scores", OpKind.GEMM, [qt, kt], fn=F(_scores_payload),
+               cost=gemm_cost(b * nh * s, hd, t),
+               fuse_sig=("qk", s, t, hd), out_shape=(b, nh, s, t))
+    sm = g.add(f"{pre}scale_mask", OpKind.ELEMENTWISE, [sc],
+               fn=F(_make_scale_mask(scale, window, causal)),
+               cost=elementwise_cost(b * nh * s * t, 4, flops_per_elem=2),
+               fuse_sig=("mask", s, t, scale, window, causal),
+               out_shape=(b, nh, s, t))
+    sx = g.add(f"{pre}softmax", OpKind.REDUCE, [sm], fn=F(_softmax_payload),
+               cost=elementwise_cost(b * nh * s * t, 4, flops_per_elem=5),
+               fuse_sig=("smax", s, t), out_shape=(b, nh, s, t))
+    cx = g.add(f"{pre}ctx", OpKind.GEMM, [sx, vt], fn=F(_ctx_payload),
+               cost=gemm_cost(b * nh * s, t, dv),
+               fuse_sig=("pv", s, t, dv), out_shape=(b, nh, s, dv))
+    return g.add(f"{pre}ctxt", OpKind.ELEMENTWISE, [cx], fn=F(_merge_heads),
+                 cost=elementwise_cost(b * s * nh * dv),
+                 fuse_sig=("mrg", s, nh, dv), out_shape=(b, s, nh * dv))
+
+
+def _attn_stages(g, pre, q, k, v, b, s, t, nh, kvh, hd,
+                 scale=None, causal=True, window=None, with_fn=False):
+    """Full decomposed attention from flat [B,S,H·D] projection outputs:
+    three head-split transpose copies (the memory-intensive stage bert/t5
+    already export), then :func:`_attn_core`."""
+    scale = hd ** -0.5 if scale is None else float(scale)
+
+    def F(f):
+        return f if with_fn else None
+    qt = g.add(f"{pre}qt", OpKind.ELEMENTWISE, [q],
+               fn=F(_make_split_heads(nh)),
+               cost=elementwise_cost(b * s * nh * hd),
+               fuse_sig=("tps", s, nh, hd), out_shape=(b, nh, s, hd))
+    kt = g.add(f"{pre}kt", OpKind.ELEMENTWISE, [k],
+               fn=F(_make_split_heads(kvh)),
+               cost=elementwise_cost(b * t * kvh * hd),
+               fuse_sig=("tps", t, kvh, hd), out_shape=(b, kvh, t, hd))
+    vt = g.add(f"{pre}vt", OpKind.ELEMENTWISE, [v],
+               fn=F(_make_split_heads(kvh)),
+               cost=elementwise_cost(b * t * kvh * hd),
+               fuse_sig=("tps", t, kvh, hd), out_shape=(b, kvh, t, hd))
+    return _attn_core(g, pre, qt, kt, vt, b, s, t, nh, kvh, hd, hd,
+                      scale, causal, window, with_fn)
+
+
+# -- MLA (DeepSeek-style latent attention), decomposed ------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_mla_q_lat(nh: int, nope: int, rope: int, theta: float):
+    """Absorbed query: rope the rope-part, fold W_kb into q_nope
+    (mla_attention's q_lat einsum), emit head-major [B,H,S,rank+rope]."""
+    def q_lat(qflat, wk_b):
+        b, s, _ = qflat.shape
+        q = qflat.reshape(b, s, nh, nope + rope)
+        q_nope, q_rope = jnp.split(q, [nope], axis=-1)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q_rope = apply_rope(q_rope, positions, theta)
+        wk = wk_b.reshape(-1, nh, nope)
+        lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk,
+                         preferred_element_type=jnp.float32).astype(qflat.dtype)
+        return jnp.concatenate([lat, q_rope], axis=-1).transpose(0, 2, 1, 3)
+    return q_lat
+
+
+@functools.lru_cache(maxsize=None)
+def _make_mla_kv_prep(rank: int, theta: float):
+    """Latent KV: rmsnorm the compressed part, rope the shared k_rope,
+    concatenate — ONE latent head, head-major [B,1,S,rank+rope]."""
+    def kv_prep(kv, scale):
+        b, s, _ = kv.shape
+        c_kv, k_rope = jnp.split(kv, [rank], axis=-1)
+        c_kv = _rms({"scale": scale}, c_kv)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        k_rope = apply_rope(k_rope[:, :, None, :], positions, theta)[:, :, 0]
+        return jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]
+    return kv_prep
+
+
+@functools.lru_cache(maxsize=None)
+def _make_latent_v(rank: int):
+    def latent_v(kcat):
+        return kcat[..., :rank]
+    return latent_v
+
+
+@functools.lru_cache(maxsize=None)
+def _make_mla_out(nh: int, rank: int, v_head: int):
+    def mla_out(lat_flat, wv_b):
+        b, s, _ = lat_flat.shape
+        lat = lat_flat.reshape(b, s, nh, rank)
+        wv = wv_b.reshape(rank, nh, v_head)
+        out = jnp.einsum("bshr,rhd->bshd", lat, wv,
+                         preferred_element_type=jnp.float32).astype(lat_flat.dtype)
+        return out.reshape(b, s, nh * v_head)
+    return mla_out
+
+
+def _mla_block(g, cfg, n1, b, s, tag, attn_p):
+    """MLA at traced-kernel granularity (absorbed formulation, kvh = 1):
+    low-rank Q/KV projections → latent score/context GEMMs with the
+    mask+softmax stage explicit → per-head value up-projection → wo.
+    Works cost-only and payload-backed alike; per-stage nodes carry their
+    own vmem/occupancy instead of the old folded max-of-phases bound."""
+    m, d, nh = cfg.mla, cfg.d_model, cfg.n_heads
+    nope, rope, rank = m.qk_nope_head_dim, m.qk_rope_head_dim, m.kv_lora_rank
+    qk_head = nope + rope
+    with_fn = attn_p is not None
+    cq = _gemm_node(g, f"{tag}.wq_a", n1, attn_p and attn_p["wq_a"],
+                    b * s, d, m.q_lora_rank)
+    qn = g.add(f"{tag}.q_norm", OpKind.NORM, [cq],
+               fn=(lambda h: _rms(attn_p["q_norm"], h)) if with_fn else None,
+               cost=norm_cost(b * s * m.q_lora_rank))
+    qb = _gemm_node(g, f"{tag}.wq_b", qn, attn_p and attn_p["wq_b"],
+                    b * s, m.q_lora_rank, nh * qk_head)
+    q_lat = g.add(f"{tag}.q_lat", OpKind.GEMM, [qb],
+                  fn=_make_mla_q_lat(nh, nope, rope, cfg.rope_theta)
+                  if with_fn else None,
+                  cost=gemm_cost(b * s * nh, nope, rank),
+                  fuse_sig=("qlat", s, nh, nope, rank),
+                  out_shape=(b, nh, s, rank + rope),
+                  **({"consts": (attn_p["wk_b"]["w"],)} if with_fn else {}))
+    kva = _gemm_node(g, f"{tag}.wkv_a", n1, attn_p and attn_p["wkv_a"],
+                     b * s, d, rank + rope)
+    kvp = g.add(f"{tag}.kv_prep", OpKind.NORM, [kva],
+                fn=_make_mla_kv_prep(rank, cfg.rope_theta)
+                if with_fn else None,
+                cost=norm_cost(b * s * (rank + rope)),
+                fuse_sig=("mlakv", s, rank, rope),
+                out_shape=(b, 1, s, rank + rope),
+                **({"consts": (attn_p["kv_norm"]["scale"],)} if with_fn else {}))
+    vlat = g.add(f"{tag}.v_lat", OpKind.ELEMENTWISE, [kvp],
+                 fn=_make_latent_v(rank) if with_fn else None,
+                 cost=elementwise_cost(b * s * rank),
+                 fuse_sig=("vlat", s, rank), out_shape=(b, 1, s, rank))
+    mrg = _attn_core(g, f"{tag}.", q_lat, kvp, vlat, b, s, s, nh, 1,
+                     rank + rope, rank, scale=qk_head ** -0.5, causal=True,
+                     window=None, with_fn=with_fn)
+    aout = g.add(f"{tag}.attn_out", OpKind.GEMM, [mrg],
+                 fn=_make_mla_out(nh, rank, m.v_head_dim)
+                 if with_fn else None,
+                 cost=gemm_cost(b * s * nh, rank, m.v_head_dim),
+                 fuse_sig=("mlaout", s, nh, rank, m.v_head_dim),
+                 **({"consts": (attn_p["wv_b"]["w"],)} if with_fn else {}))
+    return _gemm_node(g, f"{tag}.wo", aout, attn_p and attn_p["wo"],
+                      b * s, nh * m.v_head_dim, d)
+
+
+def _dense_layer(g, cfg, x, b, s, tag, pl, root, moe: bool,
+                 moe_branch_cap: int = 16, moe_dispatch: str = "auto",
+                 moe_cap_scale: float = 1.0):
     d, hd, nh, kvh = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     bias = cfg.qkv_bias
-    n1 = g.add(f"{tag}.norm1", OpKind.NORM, [x],
-               fn=(lambda h: _rms(pl["norm1"], h)) if pl else None,
-               cost=norm_cost(b * s * d))
+    n1 = _norm_node(g, f"{tag}.norm1", x, pl and pl["norm1"], cfg.norm,
+                    b * s * d)
     attn_p = pl["attn"] if pl else None
-    if pl is not None and cfg.mla is not None:
-        # MLA params carry low-rank factors (wq_a/wq_b/wkv_a/...), not the
-        # separate wq/wk/wv the branch structure below expects — run the
-        # whole latent attention (wo included) as one payload node.  The
-        # node's cost must carry the folded-in projection GEMMs too, or the
-        # layer's dominant FLOPs vanish from the scheduler's view.
-        m = cfg.mla
-        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
-        o = g.add(f"{tag}.attn", OpKind.ATTENTION, [n1],
-                  fn=lambda h: _mla_payload(cfg, attn_p, h),
-                  cost=_sum_costs(
-                      attention_cost(b, s, s, nh, hd, kvh),
-                      gemm_cost(b * s, d, m.q_lora_rank),
-                      gemm_cost(b * s, m.q_lora_rank, nh * qk_head),
-                      gemm_cost(b * s, d, m.kv_lora_rank + m.qk_rope_head_dim),
-                      gemm_cost(b * s, nh * m.v_head_dim, d)))
+    if cfg.mla is not None:
+        o = _mla_block(g, cfg, n1, b, s, tag, attn_p)
     else:
-        # QKV: 3 parallel GEMM branches (the canonical Opara wave)
+        # QKV: 3 parallel GEMM branches (the canonical Opara wave) feeding
+        # the decomposed attention stages
         q = _gemm_node(g, f"{tag}.wq", n1, attn_p and attn_p["wq"], b * s, d, nh * hd, bias)
         k = _gemm_node(g, f"{tag}.wk", n1, attn_p and attn_p["wk"], b * s, d, kvh * hd, bias)
         v = _gemm_node(g, f"{tag}.wv", n1, attn_p and attn_p["wv"], b * s, d, kvh * hd, bias)
-        att = g.add(f"{tag}.attn", OpKind.ATTENTION, [q, k, v],
-                    fn=(lambda qq, kk, vv: _attn_payload(cfg, qq, kk, vv)) if pl else None,
-                    cost=attention_cost(b, s, s, nh, hd, kvh))
-        o = _gemm_node(g, f"{tag}.wo", att, attn_p and attn_p["wo"], b * s, nh * hd, d, False)
+        mrg = _attn_stages(g, f"{tag}.", q, k, v, b, s, s, nh, kvh, hd,
+                           causal=True, window=None, with_fn=pl is not None)
+        o = _gemm_node(g, f"{tag}.wo", mrg, attn_p and attn_p["wo"], b * s, nh * hd, d, False)
     r1 = g.add(f"{tag}.res1", OpKind.ELEMENTWISE, [x, o],
                fn=(lambda a, c: a + c) if pl else None,
                cost=elementwise_cost(b * s * d, n_in=2))
-    n2 = g.add(f"{tag}.norm2", OpKind.NORM, [r1],
-               fn=(lambda h: _rms(pl["norm2"], h)) if pl else None,
-               cost=norm_cost(b * s * d))
+    n2 = _norm_node(g, f"{tag}.norm2", r1, pl and pl["norm2"], cfg.norm,
+                    b * s * d)
     if not moe:
         dff = cfg.d_ff
         ffn_p = pl["ffn"] if pl else None
-        gate = _gemm_node(g, f"{tag}.gate", n2, ffn_p and ffn_p["gate"],
-                          b * s, d, dff, False)
-        up = _gemm_node(g, f"{tag}.up", n2, ffn_p and ffn_p["up"],
-                        b * s, d, dff, False)
+        gate = _ffn_gemm(g, f"{tag}.gate", n2, root, ffn_p and ffn_p["gate"],
+                         b * s, d, dff)
+        up = _ffn_gemm(g, f"{tag}.up", n2, root, ffn_p and ffn_p["up"],
+                       b * s, d, dff)
         prod = g.add(f"{tag}.glu", OpKind.ELEMENTWISE, [gate, up],
                      fn=(lambda a, c: jax.nn.silu(a) * c) if pl else None,
                      cost=elementwise_cost(b * s * dff, n_in=2, flops_per_elem=5))
-        down = _gemm_node(g, f"{tag}.down", prod, ffn_p and ffn_p["down"],
-                          b * s, dff, d, False)
+        down = _ffn_gemm(g, f"{tag}.down", prod, root, ffn_p and ffn_p["down"],
+                         b * s, dff, d)
     elif moe_dispatch == "ragged" or (moe_dispatch == "auto" and pl is not None):
         down = _moe_ragged_block(g, cfg, n2, b, s, tag,
-                                 pl["ffn"] if pl else None, moe_branch_cap)
+                                 pl["ffn"] if pl else None, moe_branch_cap,
+                                 moe_cap_scale)
     else:
         e = cfg.moe
         moe_p = pl["ffn"] if pl else None
@@ -249,28 +490,14 @@ def _dense_layer(g, cfg, x, b, s, tag, pl, moe: bool, moe_branch_cap: int = 16,
     return out
 
 
-def _attn_payload(cfg, q, k, v):
-    from .attention import _sdpa, causal_window_mask
-    b, s = q.shape[0], q.shape[1]
-    nh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    qh = q.reshape(b, s, nh, hd)
-    kh = k.reshape(b, s, kvh, hd)
-    vh = v.reshape(b, s, kvh, hd)
-    pos = jnp.arange(s)
-    mask = causal_window_mask(pos, pos, None)
-    return _sdpa(qh, kh, vh, mask).reshape(b, s, nh * hd)
-
-
-def _mla_payload(cfg, p, h):
-    from .attention import mla_prefill
-    b, s = h.shape[0], h.shape[1]
-    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
-    return mla_prefill(p, h, cfg, positions)[0]
-
-
 def _sum_costs(*costs):
     """Combine analytic costs of ops folded into one node: traffic and
-    FLOPs add; working set and occupancy are bounded by the widest phase."""
+    FLOPs add; working set and occupancy are bounded by the widest phase.
+
+    The exporter no longer folds attention phases (every stage node carries
+    its OWN vmem/occupancy now); this stays as the documented folding rule —
+    tests pin that a folded cost equals the field-wise sum/max of the
+    decomposed per-stage costs it replaced."""
     from ..core.graph import OpCost
     occ = [c.occupancy for c in costs if c.occupancy is not None]
     return OpCost(
@@ -312,7 +539,10 @@ def _topk_routing(logits, nb: int, top_k: int, aux_free: bool):
 
 def _make_dispatch(j: int, cap: int, nb: int, top_k: int, aux_free: bool):
     """Per-expert token gather: the ``cap`` rows routed to expert ``j``
-    (capacity-truncated, zero-padded when fewer arrive)."""
+    (capacity-truncated, zero-padded when fewer arrive).  The cumsum rank
+    equals the within-expert rank of a stable sort by expert id — identical
+    overflow semantics to the production sort dispatch
+    (:func:`repro.models.ffn.moe_ffn_sort`)."""
     def dispatch(h, logits):
         d = h.shape[-1]
         xf = h.reshape(-1, d)
@@ -371,7 +601,8 @@ def _make_combine(caps: tuple[int, ...], nb: int, top_k: int, aux_free: bool):
     return combine
 
 
-def _moe_ragged_block(g, cfg, n2, b, s, tag, moe_p, moe_branch_cap):
+def _moe_ragged_block(g, cfg, n2, b, s, tag, moe_p, moe_branch_cap,
+                      cap_scale: float = 1.0):
     """Routed expert fan-out with REAL dispatch/combine payloads.
 
     router → nb parallel per-expert gathers (unequal static capacities) →
@@ -381,13 +612,14 @@ def _moe_ragged_block(g, cfg, n2, b, s, tag, moe_p, moe_branch_cap):
     always-on shared expert).  Fan-out is capped at ``moe_branch_cap``
     branches; routing is then restricted to the first nb experts, so the
     exported math stays self-consistent (the differential oracle runs the
-    same payloads per-op).
-    """
+    same payloads per-op).  ``cap_scale`` < 1 shrinks the static capacities
+    to force genuine overflow re-routing."""
     e = cfg.moe
     d, de = cfg.d_model, e.d_expert
     nb = min(e.n_experts, moe_branch_cap)
     top_k = min(e.top_k, nb)
-    caps = _moe_capacities(b * s, e, nb, top_k)
+    caps = tuple(max(1, int(round(c * cap_scale)))
+                 for c in _moe_capacities(b * s, e, nb, top_k))
     rw = (jnp.asarray(moe_p["router"]["w"], jnp.float32)[:, :nb]
           if moe_p is not None else None)
     router = g.add(
@@ -445,121 +677,385 @@ def _moe_ragged_block(g, cfg, n2, b, s, tag, moe_p, moe_branch_cap):
                  cost=elementwise_cost(b * s * d, n_in=2))
 
 
-def _hybrid_layer(g, cfg, x, b, s, tag, pl, window):
+# -- Hymba (parallel attention ∥ mamba) ---------------------------------------
+
+def _mamba_conv_payload(xz, w):
+    """Split in_proj output, causal depthwise conv + silu on the x half
+    (zero prefill conv state, exactly ssm._mamba_conv_seq), carry z along."""
+    di = xz.shape[-1] // 2
+    xi, z = xz[..., :di], xz[..., di:]
+    k = w.shape[0]
+    xp = jnp.concatenate(
+        [jnp.zeros((xi.shape[0], k - 1, di), xi.dtype), xi], axis=1)
+    out = sum(xp[:, i: i + xi.shape[1]] * w[i][None, None].astype(xi.dtype)
+              for i in range(k))
+    return jnp.concatenate([jax.nn.silu(out), z], axis=-1)
+
+
+def _mamba_xproj_payload(xz, w):
+    """B/C/dt projection of the conved x half; emits [x ‖ z ‖ bcd] so the
+    scan stage needs a single input edge."""
+    di = xz.shape[-1] // 2
+    bcd = jnp.einsum("...i,io->...o", xz[..., :di], w)
+    return jnp.concatenate([xz, bcd], axis=-1)
+
+
+def _mamba_scan_payload(packed, a_log, d_skip):
+    """Discretize + selective scan + skip + silu(z) gate
+    (exactly ssm.mamba_seq's tail on a zero initial state)."""
+    di, n = a_log.shape
+    xi = packed[..., :di]
+    z = packed[..., di:2 * di]
+    bcd = packed[..., 2 * di:]
+    bmat, cmat, dt_raw = jnp.split(bcd, [n, 2 * n], axis=-1)
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32)) + 1e-4
+    a = -jnp.exp(a_log)
+    h0 = jnp.zeros((xi.shape[0], di, n), jnp.float32)
+    _, ys = mamba_scan_ref(delta, xi.astype(jnp.float32),
+                           bmat.astype(jnp.float32),
+                           cmat.astype(jnp.float32), a, h0)
+    y = ys + xi.astype(jnp.float32) * d_skip[None, None]
+    return y.astype(packed.dtype) * jax.nn.silu(z)
+
+
+def _head_mix(a, c):
+    return 0.5 * (a + c)
+
+
+def _hybrid_layer(g, cfg, x, b, s, tag, pl, window, root):
     """Hymba: attention and mamba heads in PARALLEL — the paper's Fig. 3
-    compute∥memory overlap case (attn = MXU-bound, SSM scan = HBM-bound)."""
+    compute∥memory overlap case (attn = MXU-bound, SSM scan = HBM-bound).
+    Both branches now carry real payloads; the sliding window enters as a
+    mask (costs use the full s×t logits the naive payload materializes)."""
     d, hd, nh, kvh = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
-    di = cfg.ssm.expand * d
-    n1 = g.add(f"{tag}.norm1", OpKind.NORM, [x], cost=norm_cost(b * s * d))
-    q = _gemm_node(g, f"{tag}.wq", n1, None, b * s, d, nh * hd)
-    k = _gemm_node(g, f"{tag}.wk", n1, None, b * s, d, kvh * hd)
-    v = _gemm_node(g, f"{tag}.wv", n1, None, b * s, d, kvh * hd)
-    att = g.add(f"{tag}.attn", OpKind.ATTENTION, [q, k, v],
-                cost=attention_cost(b, s, min(s, window), nh, hd, kvh))
-    # parallel mamba branch
-    inp = _gemm_node(g, f"{tag}.mamba_in", n1, None, b * s, d, 2 * di)
+    ssm = cfg.ssm
+    di = ssm.expand * d
+    with_fn = pl is not None
+    attn_p = pl["attn"] if pl else None
+    mp = pl["mamba"] if pl else None
+    n1 = _norm_node(g, f"{tag}.norm1", x, pl and pl["norm1"], cfg.norm,
+                    b * s * d)
+    q = _gemm_node(g, f"{tag}.wq", n1, attn_p and attn_p["wq"],
+                   b * s, d, nh * hd, cfg.qkv_bias)
+    k = _gemm_node(g, f"{tag}.wk", n1, attn_p and attn_p["wk"],
+                   b * s, d, kvh * hd, cfg.qkv_bias)
+    v = _gemm_node(g, f"{tag}.wv", n1, attn_p and attn_p["wv"],
+                   b * s, d, kvh * hd, cfg.qkv_bias)
+    mrg = _attn_stages(g, f"{tag}.", q, k, v, b, s, s, nh, kvh, hd,
+                       causal=True, window=window, with_fn=with_fn)
+    o = _gemm_node(g, f"{tag}.wo", mrg, attn_p and attn_p["wo"],
+                   b * s, nh * hd, d)
+    # parallel mamba branch (memory-bound scan against the MXU wave above)
+    inp = _gemm_node(g, f"{tag}.mamba_in", n1, mp and mp["in_proj"],
+                     b * s, d, 2 * di)
     conv = g.add(f"{tag}.mamba_conv", OpKind.ELEMENTWISE, [inp],
-                 cost=elementwise_cost(b * s * di, n_in=1, flops_per_elem=8))
-    scan = g.add(f"{tag}.mamba_scan", OpKind.SCAN, [conv],
-                 cost=scan_cost(b, s, di, cfg.ssm.state_dim))
-    mo = _gemm_node(g, f"{tag}.mamba_out", scan, None, b * s, di, d)
-    o = _gemm_node(g, f"{tag}.wo", att, None, b * s, nh * hd, d)
+                 fn=_mamba_conv_payload if with_fn else None,
+                 cost=elementwise_cost(b * s * di, n_in=1, flops_per_elem=8),
+                 fuse_sig=("mconv", s, di),
+                 **({"consts": (mp["conv_w"],)} if with_fn else {}))
+    xproj = g.add(f"{tag}.mamba_xproj", OpKind.GEMM, [conv],
+                  fn=_mamba_xproj_payload if with_fn else None,
+                  cost=gemm_cost(b * s, di, 2 * ssm.state_dim + 1),
+                  fuse_sig=("mxproj", s, di, ssm.state_dim),
+                  **({"consts": (mp["x_proj"]["w"],)} if with_fn else {}))
+    scan = g.add(f"{tag}.mamba_scan", OpKind.SCAN, [xproj],
+                 fn=_mamba_scan_payload if with_fn else None,
+                 cost=scan_cost(b, s, di, ssm.state_dim),
+                 fuse_sig=("mscan", s, di, ssm.state_dim),
+                 **({"consts": (mp["a_log"], mp["d_skip"])} if with_fn else {}))
+    mo = _gemm_node(g, f"{tag}.mamba_out", scan, mp and mp["out_proj"],
+                    b * s, di, d)
     mix = g.add(f"{tag}.head_mix", OpKind.ELEMENTWISE, [o, mo],
+                fn=_head_mix if with_fn else None,
                 cost=elementwise_cost(b * s * d, n_in=2))
     r1 = g.add(f"{tag}.res1", OpKind.ELEMENTWISE, [x, mix],
+               fn=(lambda a, c: a + c) if with_fn else None,
                cost=elementwise_cost(b * s * d, n_in=2))
-    n2 = g.add(f"{tag}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * s * d))
-    gate = _gemm_node(g, f"{tag}.gate", n2, None, b * s, d, cfg.d_ff)
-    up = _gemm_node(g, f"{tag}.up", n2, None, b * s, d, cfg.d_ff)
+    n2 = _norm_node(g, f"{tag}.norm2", r1, pl and pl["norm2"], cfg.norm,
+                    b * s * d)
+    ffn_p = pl["ffn"] if pl else None
+    gate = _ffn_gemm(g, f"{tag}.gate", n2, root, ffn_p and ffn_p["gate"],
+                     b * s, d, cfg.d_ff)
+    up = _ffn_gemm(g, f"{tag}.up", n2, root, ffn_p and ffn_p["up"],
+                   b * s, d, cfg.d_ff)
     glu = g.add(f"{tag}.glu", OpKind.ELEMENTWISE, [gate, up],
-                cost=elementwise_cost(b * s * cfg.d_ff, n_in=2))
-    down = _gemm_node(g, f"{tag}.down", glu, None, b * s, cfg.d_ff, d)
+                fn=(lambda a, c: jax.nn.silu(a) * c) if with_fn else None,
+                cost=elementwise_cost(b * s * cfg.d_ff, n_in=2, flops_per_elem=5))
+    down = _ffn_gemm(g, f"{tag}.down", glu, root, ffn_p and ffn_p["down"],
+                     b * s, cfg.d_ff, d)
     return g.add(f"{tag}.res2", OpKind.ELEMENTWISE, [r1, down],
+                 fn=(lambda a, c: a + c) if with_fn else None,
                  cost=elementwise_cost(b * s * d, n_in=2))
 
 
-def build_encdec_opgraph(cfg: ModelConfig, batch: int, dec_seq: int,
-                         n_layers: int | None = None) -> OpGraph:
-    """Whisper/T5-style encoder-decoder DAG: the encoder chain and the
-    decoder's cross-attention KV projections are parallel branches until the
-    first cross-attend — the operator-diversity case the paper highlights
-    for T5 (Fig. 7a)."""
-    g = OpGraph(cfg.name)
+# -- encoder-decoder (Whisper) ------------------------------------------------
+
+def _encdec_attn(g, pre, src_q, src_kv, ap, cfg, b, s, t, causal):
+    """Projection markers + decomposed stages for one (self or cross)
+    attention; ``src_q``/``src_kv`` may differ (cross-attention reads the
+    encoder output for K/V — the parallel branch the paper highlights for
+    T5, Fig. 7a)."""
     d, nh, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _gemm_node(g, f"{pre}wq", src_q, ap and ap["wq"],
+                   b * s, d, nh * hd, cfg.qkv_bias)
+    k = _gemm_node(g, f"{pre}wk", src_kv, ap and ap["wk"],
+                   b * t, d, kvh * hd, cfg.qkv_bias)
+    v = _gemm_node(g, f"{pre}wv", src_kv, ap and ap["wv"],
+                   b * t, d, kvh * hd, cfg.qkv_bias)
+    mrg = _attn_stages(g, pre, q, k, v, b, s, t, nh, kvh, hd,
+                       causal=causal, with_fn=ap is not None)
+    return _gemm_node(g, f"{pre}wo", mrg, ap and ap["wo"],
+                      b * s, nh * hd, d)
+
+
+def _encdec_ffn(g, pre, r_in, n2_src, root, ffn_p, cfg, b, t):
+    """norm2 → FF (gelu: up→act→down; swiglu: gate∥up→glu→down) → res.
+
+    Shapes are declared on the activation node: encoder and decoder FF
+    stages share fuse signatures but differ in sequence length, and capture
+    must SEE that to keep them out of one stacked kernel."""
+    d, dff = cfg.d_model, cfg.d_ff
+    m = b * t
+    with_fn = ffn_p is not None
+    if cfg.act == "swiglu":
+        gate = _ffn_gemm(g, f"{pre}gate", n2_src, root,
+                         ffn_p and ffn_p["gate"], m, d, dff)
+        up = _ffn_gemm(g, f"{pre}up", n2_src, root,
+                       ffn_p and ffn_p["up"], m, d, dff)
+        act = g.add(f"{pre}glu", OpKind.ELEMENTWISE, [gate, up],
+                    fn=(lambda a, c: jax.nn.silu(a) * c) if with_fn else None,
+                    cost=elementwise_cost(m * dff, n_in=2, flops_per_elem=5),
+                    out_shape=(b, t, dff))
+    else:
+        up = _ffn_gemm(g, f"{pre}up", n2_src, root,
+                       ffn_p and ffn_p["up"], m, d, dff)
+        act = g.add(f"{pre}act", OpKind.ELEMENTWISE, [up],
+                    fn=(lambda h: gelu(h)) if with_fn else None,
+                    cost=elementwise_cost(m * dff, n_in=1, flops_per_elem=8),
+                    out_shape=(b, t, dff))
+    dn = _ffn_gemm(g, f"{pre}down", act, root, ffn_p and ffn_p["down"],
+                   m, dff, d)
+    return g.add(f"{pre}res2", OpKind.ELEMENTWISE, [r_in, dn],
+                 fn=(lambda a, c: a + c) if with_fn else None,
+                 cost=elementwise_cost(m * d, n_in=2))
+
+
+def _enc_layer(g, cfg, enc, b, es, l, pl, root):
+    d = cfg.d_model
+    n1 = _norm_node(g, f"e{l}.norm1", enc, pl and pl["norm1"], cfg.norm,
+                    b * es * d, out_shape=(b, es, d))
+    o = _encdec_attn(g, f"e{l}.", n1, n1, pl and pl["attn"], cfg,
+                     b, es, es, causal=False)
+    r1 = g.add(f"e{l}.res1", OpKind.ELEMENTWISE, [enc, o],
+               fn=(lambda a, c: a + c) if pl else None,
+               cost=elementwise_cost(b * es * d, n_in=2))
+    n2 = _norm_node(g, f"e{l}.norm2", r1, pl and pl["norm2"], cfg.norm,
+                    b * es * d, out_shape=(b, es, d))
+    return _encdec_ffn(g, f"e{l}.", r1, n2, root, pl and pl["ffn"], cfg,
+                       b, es)
+
+
+def _dec_layer(g, cfg, dec, enc_out, b, s, es, l, pl, root):
+    """Mirrors encdec.decoder_block_seq: self-attn → cross-attn (K/V from
+    the encoder, a branch parallel to the self-attention chain) → FFN."""
+    d = cfg.d_model
+    n1 = _norm_node(g, f"d{l}.norm1", dec, pl and pl["norm1"], cfg.norm,
+                    b * s * d, out_shape=(b, s, d))
+    o = _encdec_attn(g, f"d{l}.", n1, n1, pl and pl["self_attn"], cfg,
+                     b, s, s, causal=True)
+    r1 = g.add(f"d{l}.res1", OpKind.ELEMENTWISE, [dec, o],
+               fn=(lambda a, c: a + c) if pl else None,
+               cost=elementwise_cost(b * s * d, n_in=2))
+    nx = _norm_node(g, f"d{l}.norm_x", r1, pl and pl["norm_x"], cfg.norm,
+                    b * s * d, out_shape=(b, s, d))
+    co = _encdec_attn(g, f"d{l}.cross_", nx, enc_out,
+                      pl and pl["cross_attn"], cfg, b, s, es, causal=False)
+    rx = g.add(f"d{l}.res_x", OpKind.ELEMENTWISE, [r1, co],
+               fn=(lambda a, c: a + c) if pl else None,
+               cost=elementwise_cost(b * s * d, n_in=2))
+    n2 = _norm_node(g, f"d{l}.norm2", rx, pl and pl["norm2"], cfg.norm,
+                    b * s * d, out_shape=(b, s, d))
+    return _encdec_ffn(g, f"d{l}.", rx, n2, root, pl and pl["ffn"], cfg,
+                       b, s)
+
+
+def build_encdec_opgraph(cfg: ModelConfig, batch: int, dec_seq: int,
+                         n_layers: int | None = None,
+                         params: Any = None) -> OpGraph:
+    """Whisper/T5-style encoder-decoder DAG at traced-kernel granularity:
+    the encoder chain and the decoder's cross-attention K/V projections are
+    parallel branches until the first cross-attend — the operator-diversity
+    case the paper highlights for T5 (Fig. 7a).  ``params`` (an
+    ``init_encdec`` tree) threads real payloads through every node,
+    mirroring ``encdec.encode``/``decode_seq`` prefill math."""
+    g = OpGraph(cfg.name)
+    d = cfg.d_model
     b = batch
     fe = cfg.frontend
     L = n_layers if n_layers is not None else cfg.n_layers
     Ld = n_layers if n_layers is not None else (cfg.n_dec_layers or cfg.n_layers)
     es = fe.n_tokens if fe else 1500
+    feat = fe.feat_dim if fe else d
+    with_fn = params is not None
 
-    frames = g.add("frames", OpKind.INPUT, out_shape=(b, es, fe.feat_dim if fe else d))
+    frames = g.add("frames", OpKind.INPUT, out_shape=(b, es, feat))
     # conv-style audio frontend lowered as an im2col GEMM — routed through
     # _gemm_node so the matmul payload marker appears the moment weights are
     # threaded (no hand-placed markers, ROADMAP item)
-    enc = _gemm_node(g, "frontend_proj", frames, None,
-                     b * es, fe.feat_dim if fe else d, d)
+    enc = _gemm_node(g, "frontend_proj", frames,
+                     params and params["frontend_proj"],
+                     b * es, feat, d, bias=True)
+    pe = _w(params, "enc_pos")
+    enc = g.add("enc_pos", OpKind.ELEMENTWISE, [enc],
+                fn=(lambda h: h + pe[None, : h.shape[1]].astype(h.dtype))
+                if with_fn else None,
+                cost=elementwise_cost(b * es * d))
     for l in range(L):
-        n1 = g.add(f"e{l}.norm1", OpKind.NORM, [enc], cost=norm_cost(b * es * d))
-        q = _gemm_node(g, f"e{l}.wq", n1, None, b * es, d, nh * hd)
-        k = _gemm_node(g, f"e{l}.wk", n1, None, b * es, d, kvh * hd)
-        v = _gemm_node(g, f"e{l}.wv", n1, None, b * es, d, kvh * hd)
-        att = g.add(f"e{l}.attn", OpKind.ATTENTION, [q, k, v],
-                    cost=attention_cost(b, es, es, nh, hd, kvh))
-        o = _gemm_node(g, f"e{l}.wo", att, None, b * es, nh * hd, d)
-        r1 = g.add(f"e{l}.res1", OpKind.ELEMENTWISE, [enc, o],
-                   cost=elementwise_cost(b * es * d, n_in=2))
-        n2 = g.add(f"e{l}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * es * d))
-        up = _gemm_node(g, f"e{l}.up", n2, None, b * es, d, cfg.d_ff)
-        dn = _gemm_node(g, f"e{l}.down", up, None, b * es, cfg.d_ff, d)
-        enc = g.add(f"e{l}.res2", OpKind.ELEMENTWISE, [r1, dn],
-                    cost=elementwise_cost(b * es * d, n_in=2))
+        pl = (jax.tree_util.tree_map(lambda a: a[l], params["enc_blocks"])
+              if with_fn else None)
+        enc = _enc_layer(g, cfg, enc, b, es, l, pl, frames)
+    enc = _norm_node(g, "enc_norm", enc, _w(params, "enc_norm"), cfg.norm,
+                     b * es * d, out_shape=(b, es, d))
 
     tokens = g.add("tokens", OpKind.INPUT, out_shape=(b, dec_seq))
-    dec = g.add("dec_embed", OpKind.GATHER, [tokens], cost=gather_cost(b * dec_seq, d))
+    et = _w(params, "embed", "table")
+    dec = g.add("dec_embed", OpKind.GATHER, [tokens],
+                fn=(lambda t: jnp.take(et, t, axis=0)) if with_fn else None,
+                cost=gather_cost(b * dec_seq, d))
+    dp = _w(params, "dec_pos")
     s = dec_seq
+    dec = g.add("dec_pos", OpKind.ELEMENTWISE, [dec],
+                fn=(lambda h: h + dp[None, : h.shape[1]].astype(h.dtype))
+                if with_fn else None,
+                cost=elementwise_cost(b * s * d))
     for l in range(Ld):
-        n1 = g.add(f"d{l}.norm1", OpKind.NORM, [dec], cost=norm_cost(b * s * d))
-        q = _gemm_node(g, f"d{l}.wq", n1, None, b * s, d, nh * hd)
-        k = _gemm_node(g, f"d{l}.wk", n1, None, b * s, d, kvh * hd)
-        v = _gemm_node(g, f"d{l}.wv", n1, None, b * s, d, kvh * hd)
-        att = g.add(f"d{l}.self", OpKind.ATTENTION, [q, k, v],
-                    cost=attention_cost(b, s, s, nh, hd, kvh))
-        # cross-attn K/V from the encoder: parallel with decoder self-attn
-        ck = _gemm_node(g, f"d{l}.cross_k", enc, None, b * es, d, kvh * hd)
-        cv = _gemm_node(g, f"d{l}.cross_v", enc, None, b * es, d, kvh * hd)
-        cq = _gemm_node(g, f"d{l}.cross_q", att, None, b * s, d, nh * hd)
-        xat = g.add(f"d{l}.cross", OpKind.ATTENTION, [cq, ck, cv],
-                    cost=attention_cost(b, s, es, nh, hd, kvh))
-        o = _gemm_node(g, f"d{l}.wo", xat, None, b * s, nh * hd, d)
-        r1 = g.add(f"d{l}.res1", OpKind.ELEMENTWISE, [dec, o],
-                   cost=elementwise_cost(b * s * d, n_in=2))
-        n2 = g.add(f"d{l}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * s * d))
-        up = _gemm_node(g, f"d{l}.up", n2, None, b * s, d, cfg.d_ff)
-        dn = _gemm_node(g, f"d{l}.down", up, None, b * s, cfg.d_ff, d)
-        dec = g.add(f"d{l}.res2", OpKind.ELEMENTWISE, [r1, dn],
-                    cost=elementwise_cost(b * s * d, n_in=2))
-    g.add("logits", OpKind.GEMM, [dec], cost=gemm_cost(b * s, d, cfg.vocab_size))
+        pl = (jax.tree_util.tree_map(lambda a: a[l], params["dec_blocks"])
+              if with_fn else None)
+        dec = _dec_layer(g, cfg, dec, enc, b, s, es, l, pl, tokens)
+    dec = _norm_node(g, "dec_norm", dec, _w(params, "dec_norm"), cfg.norm,
+                     b * s * d)
+    g.add("logits", OpKind.GEMM, [dec],
+          fn=(lambda h: jnp.einsum("bsd,vd->bsv", h, et)) if with_fn else None,
+          cost=gemm_cost(b * s, d, cfg.vocab_size))
     g.validate()
     return g
 
 
-def _rwkv_layer(g, cfg, x, b, s, tag, pl):
-    """RWKV6: five parallel token-shift projections feeding the WKV scan."""
-    d = cfg.d_model
+# -- RWKV6 --------------------------------------------------------------------
+
+RWKV_LORA = 32  # data-dependent decay LoRA rank (matches ssm.init_rwkv_time_mix)
+
+
+def _shift_mix(x, mu):
+    """Token-shift interpolation with the zero prefill state
+    (ssm._token_shift at x_prev = 0)."""
+    xs = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _rwkv_decay_payload(a, wb, w_base):
+    """w_t = exp(-exp(base + lora_b(tanh(lora_a(x))))) — fp32 decay."""
+    w_log = w_base + jnp.einsum("...i,io->...o",
+                                jnp.tanh(a), wb).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(w_log))
+
+
+def _wkv_scan_payload(r, k, v, w, u):
+    h, hs = u.shape
+    b, t, d = r.shape
+    rh = r.reshape(b, t, h, hs).astype(jnp.float32)
+    kh = k.reshape(b, t, h, hs).astype(jnp.float32)
+    vh = v.reshape(b, t, h, hs).astype(jnp.float32)
+    wh = w.reshape(b, t, h, hs)
+    s0 = jnp.zeros((b, h, hs, hs), jnp.float32)
+    _, y = wkv_scan_ref(rh, kh, vh, wh, u, s0)
+    return y.reshape(b, t, d).astype(r.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_rwkv_groupnorm(hs: int):
+    """Per-head group-norm (ln_x) in fp32, exactly rwkv_time_mix_seq's."""
+    def groupnorm(y, scale, bias):
+        b, t, d = y.shape
+        yf = y.astype(jnp.float32).reshape(b, t, d // hs, hs)
+        mu = yf.mean(-1, keepdims=True)
+        var = yf.var(-1, keepdims=True)
+        yf = (yf - mu) * jax.lax.rsqrt(var + 1e-5)
+        return (yf.reshape(b, t, d) * scale.astype(jnp.float32)
+                + bias.astype(jnp.float32)).astype(y.dtype)
+    return groupnorm
+
+
+def _silu_gate(y, go):
+    return y * jax.nn.silu(go)
+
+
+def _relu_sq(x):
+    return jnp.square(jax.nn.relu(x))
+
+
+def _rwkv_layer(g, cfg, x, b, s, tag, pl, root):
+    """RWKV6: five parallel token-shift mixes feeding the r/k/v/g/decay
+    projections, the WKV scan (fused — the recurrence is one memory-bound
+    sweep, see docs/scheduling.md), group-norm, silu-gate, and the
+    squared-relu channel mix."""
+    d, dff = cfg.d_model, cfg.d_ff
     hs = cfg.ssm.head_dim if cfg.ssm else 64
-    n1 = g.add(f"{tag}.norm1", OpKind.NORM, [x], cost=norm_cost(b * s * d))
-    projs = [_gemm_node(g, f"{tag}.w{nm}", n1, None, b * s, d, d)
-             for nm in ("r", "k", "v", "g")]
-    wdec = _gemm_node(g, f"{tag}.w_lora", n1, None, b * s, d, 64)
-    scan = g.add(f"{tag}.wkv_scan", OpKind.SCAN, projs[:3] + [wdec],
-                 cost=scan_cost(b, s, d, hs))
-    gated = g.add(f"{tag}.gate_mul", OpKind.ELEMENTWISE, [scan, projs[3]],
-                  cost=elementwise_cost(b * s * d, n_in=2))
-    o = _gemm_node(g, f"{tag}.wo", gated, None, b * s, d, d)
+    with_fn = pl is not None
+    tm = pl["time_mix"] if pl else None
+    cm = pl["channel_mix"] if pl else None
+    n1 = _norm_node(g, f"{tag}.norm1", x, pl and pl["norm1"], cfg.norm,
+                    b * s * d)
+    mixes = {}
+    for i, nm in enumerate(("r", "k", "v", "g", "w")):
+        mixes[nm] = g.add(f"{tag}.mix_{nm}", OpKind.ELEMENTWISE, [n1],
+                          fn=_shift_mix if with_fn else None,
+                          cost=elementwise_cost(b * s * d, n_in=1,
+                                                flops_per_elem=3),
+                          fuse_sig=("tshift", s, d),
+                          **({"consts": (tm["mu"][i],)} if with_fn else {}))
+    pr = {nm: _gemm_node(g, f"{tag}.w{nm}", mixes[nm], tm and tm["w" + nm],
+                         b * s, d, d)
+          for nm in ("r", "k", "v", "g")}
+    la = _gemm_node(g, f"{tag}.w_lora", mixes["w"], tm and tm["w_lora_a"],
+                    b * s, d, RWKV_LORA)
+    wdec = g.add(f"{tag}.w_decay", OpKind.GEMM, [la],
+                 fn=_rwkv_decay_payload if with_fn else None,
+                 cost=gemm_cost(b * s, RWKV_LORA, d),
+                 fuse_sig=("wdecay", s, d),
+                 **({"consts": (tm["w_lora_b"]["w"], tm["w_base"])}
+                    if with_fn else {}))
+    scan = g.add(f"{tag}.wkv_scan", OpKind.SCAN,
+                 [pr["r"], pr["k"], pr["v"], wdec],
+                 fn=_wkv_scan_payload if with_fn else None,
+                 cost=scan_cost(b, s, d, hs), fuse_sig=("wkv", s, d, hs),
+                 **({"consts": (tm["u"],)} if with_fn else {}))
+    gn = g.add(f"{tag}.ln_x", OpKind.NORM, [scan],
+               fn=_make_rwkv_groupnorm(hs) if with_fn else None,
+               cost=norm_cost(b * s * d), fuse_sig=("rwkvgn", s, d, hs),
+               **({"consts": (tm["ln_x"]["scale"], tm["ln_x"]["bias"])}
+                  if with_fn else {}))
+    gated = g.add(f"{tag}.gate_mul", OpKind.ELEMENTWISE, [gn, pr["g"]],
+                  fn=_silu_gate if with_fn else None,
+                  cost=elementwise_cost(b * s * d, n_in=2, flops_per_elem=5))
+    o = _gemm_node(g, f"{tag}.wo", gated, tm and tm["wo"], b * s, d, d)
     r1 = g.add(f"{tag}.res1", OpKind.ELEMENTWISE, [x, o],
+               fn=(lambda a, c: a + c) if with_fn else None,
                cost=elementwise_cost(b * s * d, n_in=2))
-    n2 = g.add(f"{tag}.norm2", OpKind.NORM, [r1], cost=norm_cost(b * s * d))
-    ck = _gemm_node(g, f"{tag}.cm_k", n2, None, b * s, d, cfg.d_ff)
-    cv = _gemm_node(g, f"{tag}.cm_v", ck, None, b * s, cfg.d_ff, d)
+    n2 = _norm_node(g, f"{tag}.norm2", r1, pl and pl["norm2"], cfg.norm,
+                    b * s * d)
+    cmix = g.add(f"{tag}.cm_mix", OpKind.ELEMENTWISE, [n2],
+                 fn=_shift_mix if with_fn else None,
+                 cost=elementwise_cost(b * s * d, n_in=1, flops_per_elem=3),
+                 fuse_sig=("tshift", s, d),
+                 **({"consts": (cm["mu"][0],)} if with_fn else {}))
+    ck = _ffn_gemm(g, f"{tag}.cm_k", cmix, root, cm and cm["wk"],
+                   b * s, d, dff)
+    act = g.add(f"{tag}.cm_act", OpKind.ELEMENTWISE, [ck],
+                fn=_relu_sq if with_fn else None,
+                cost=elementwise_cost(b * s * dff, n_in=1, flops_per_elem=2))
+    cv = _ffn_gemm(g, f"{tag}.cm_v", act, root, cm and cm["wv"],
+                   b * s, dff, d)
     return g.add(f"{tag}.res2", OpKind.ELEMENTWISE, [r1, cv],
+                 fn=(lambda a, c: a + c) if with_fn else None,
                  cost=elementwise_cost(b * s * d, n_in=2))

@@ -70,6 +70,24 @@ def _rwkv_proj(p, x, x_prev):
     return r, k, v, g, w
 
 
+def wkv_scan_ref(rh, kh, vh, wh, u, s0):
+    """The pure-jnp WKV recurrence on head-split fp32 tensors [B,T,H,K].
+
+    Shared by :func:`rwkv_time_mix_seq` and the opgraph exporter's scan
+    payload (``models/opgraph_export``), so the exported graph executes the
+    exact production math.  Returns (s_final [B,H,K,K], y [B,T,H,K])."""
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw                        # [B,H,K] each
+        kv = kt[..., :, None] * vt[..., None, :]     # [B,H,K,K]
+        out = jnp.einsum("bhk,bhkj->bhj", rt, u[None, :, :, None] * kv + S)
+        S = wt[..., :, None] * S + kv
+        return S, out
+    xs_t = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+            jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0))
+    s_final, outs = jax.lax.scan(step, s0, xs_t)
+    return s_final, jnp.moveaxis(outs, 0, 1)         # [B,T,H,K]
+
+
 def rwkv_time_mix_seq(p, x, state, cfg: ModelConfig, use_kernels: bool = False):
     """x: [B,T,d]; state: (x_prev [B,d], S [B,H,K,K] fp32).  Returns (y, state')."""
     b, t, d = x.shape
@@ -87,16 +105,7 @@ def rwkv_time_mix_seq(p, x, state, cfg: ModelConfig, use_kernels: bool = False):
         from ..kernels.rwkv6.ops import rwkv6_tpu_or_ref
         y, s_final = rwkv6_tpu_or_ref(rh, kh, vh, wh, u, s0)
     else:
-        def step(S, rkvw):
-            rt, kt, vt, wt = rkvw                        # [B,H,K] each
-            kv = kt[..., :, None] * vt[..., None, :]     # [B,H,K,K]
-            out = jnp.einsum("bhk,bhkj->bhj", rt, u[None, :, :, None] * kv + S)
-            S = wt[..., :, None] * S + kv
-            return S, out
-        xs_t = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
-                jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0))
-        s_final, outs = jax.lax.scan(step, s0, xs_t)
-        y = jnp.moveaxis(outs, 0, 1)                     # [B,T,H,K]
+        s_final, y = wkv_scan_ref(rh, kh, vh, wh, u, s0)
 
     y = y.reshape(b, t, d).astype(x.dtype)
     # group-norm over heads (ln_x in RWKV), then gate and output proj
@@ -173,6 +182,27 @@ def _mamba_conv_seq(w, x, conv_state):
     return jax.nn.silu(out), xp[:, -(k - 1):]
 
 
+def mamba_scan_ref(delta, xi_f32, bmat, cmat, a, h0):
+    """The discretized selective scan on fp32 tensors.
+
+    delta [B,T,1], xi [B,T,di], B/C [B,T,N], a [di,N], h0 [B,di,N].
+    Shared by :func:`mamba_seq` and the opgraph exporter's scan payload.
+    Returns (h_final, y [B,T,di])."""
+    # discretize inside the scan body (never materialize [B,T,di,N]):
+    # h_t = exp(delta_t·a) h_{t-1} + (delta_t·x_t)⊗B_t ;  y_t = C_t·h_t
+    def step(h, inp):
+        delta_t, x_t, b_t, c_t = inp                    # [B,1],[B,di],[B,N],[B,N]
+        da_t = jnp.exp(delta_t[..., None] * a[None])    # [B,di,N]
+        h = da_t * h + (delta_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(xi_f32, 1, 0),
+          jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return h_final, jnp.moveaxis(ys, 0, 1)
+
+
 def mamba_seq(p, x, state, cfg: ModelConfig, use_kernels: bool = False):
     """x: [B,T,d]; state: (conv_state [B,K-1,di], h [B,di,N] fp32)."""
     s = cfg.ssm
@@ -186,21 +216,10 @@ def mamba_seq(p, x, state, cfg: ModelConfig, use_kernels: bool = False):
     bmat, cmat, dt_raw = jnp.split(bcd, [s.state_dim, 2 * s.state_dim], axis=-1)
     delta = jax.nn.softplus(dt_raw.astype(jnp.float32)) + 1e-4         # [B,T,1]
     a = -jnp.exp(p["a_log"])                                           # [di,N]
-
-    # discretize inside the scan body (never materialize [B,T,di,N]):
-    # h_t = exp(delta_t·a) h_{t-1} + (delta_t·x_t)⊗B_t ;  y_t = C_t·h_t
-    def step(h, inp):
-        delta_t, x_t, b_t, c_t = inp                    # [B,1],[B,di],[B,N],[B,N]
-        da_t = jnp.exp(delta_t[..., None] * a[None])    # [B,di,N]
-        h = da_t * h + (delta_t * x_t)[..., None] * b_t[:, None, :]
-        y = jnp.einsum("bdn,bn->bd", h, c_t)
-        return h, y
-
-    xs = (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(xi.astype(jnp.float32), 1, 0),
-          jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
-          jnp.moveaxis(cmat.astype(jnp.float32), 1, 0))
-    h_final, ys = jax.lax.scan(step, h0, xs)
-    y = jnp.moveaxis(ys, 0, 1) + xi.astype(jnp.float32) * p["d_skip"][None, None]
+    h_final, ys = mamba_scan_ref(delta, xi.astype(jnp.float32),
+                                 bmat.astype(jnp.float32),
+                                 cmat.astype(jnp.float32), a, h0)
+    y = ys + xi.astype(jnp.float32) * p["d_skip"][None, None]
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
     out = linear(p["out_proj"], y)
     return shard(out, "batch", "seq", "embed"), (conv_state, h_final)

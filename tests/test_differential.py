@@ -151,10 +151,14 @@ def test_measured_and_analytic_plans_do_not_collide(sess):
 
 # -- routed MoE: REAL ragged dispatch/combine payloads ------------------------
 
-def _build_routed_moe(arch: str, n_layers: int, seed: int = 0):
-    """Exporter-built MoE graph with real router → ragged per-expert gathers
-    → grouped expert GEMMs → weighted scatter-add combine.  fp32 weights so
-    stacked-vs-sequential execution must agree to fp32 tolerance."""
+def _build_arch(arch: str, n_layers: int, seed: int = 0,
+                dtype=jnp.float32, cap_scale: float = 1.0, seq: int = 4):
+    """Exporter-built arch graph with real payloads threaded end to end
+    (decomposed attention stages, ssm scans, ragged MoE fan-out where the
+    config has one).  fp32 weights by default so stacked-vs-sequential
+    execution must agree to fp32 tolerance; pass bf16 to exercise the
+    low-precision stacking path.  ``cap_scale`` < 1 shrinks the MoE
+    capacities to force genuine overflow re-routing."""
     import dataclasses
 
     import jax
@@ -163,17 +167,21 @@ def _build_routed_moe(arch: str, n_layers: int, seed: int = 0):
     from repro.models import make_model
     from repro.models.opgraph_export import build_lm_opgraph
 
-    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype=jnp.float32)
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype=dtype)
     model = make_model(cfg)
     params = model.init(jax.random.key(seed))
-    g = build_lm_opgraph(cfg, batch=1, seq=4, params=params,
-                         n_layers=n_layers)
+    g = build_lm_opgraph(cfg, batch=1, seq=seq, params=params,
+                         n_layers=n_layers, moe_cap_scale=cap_scale)
     tokens = jnp.asarray(
-        np.random.default_rng(5).integers(0, cfg.vocab_size, (1, 4)),
+        np.random.default_rng(5).integers(0, cfg.vocab_size, (1, seq)),
         jnp.int32)
     input_ids = [n.op_id for n in g if n.fn is None]
-    assert len(input_ids) == 1, "routed export must be fully payload-backed"
+    assert len(input_ids) == 1, "arch export must be fully payload-backed"
     return g, {"tokens": tokens}, {input_ids[0]: tokens}
+
+
+def _build_routed_moe(arch: str, n_layers: int, seed: int = 0):
+    return _build_arch(arch, n_layers, seed)
 
 
 # kimi-k2 smoke: 1 dense-prefix + MoE layers; deepseek-v3 smoke: 3 dense
@@ -266,3 +274,127 @@ def test_attach_payloads_strips_branch_gemm_markers():
     assert any(n.meta.get("payload") == "matmul" for n in g)
     attach_payloads(g, d=D, tokens=TOKENS)
     assert not any("payload" in n.meta for n in g)
+
+
+# -- newly decomposed archs: traced-kernel graphs end to end ------------------
+#
+# ISSUE 10: every arch family must pass the differential harness at the new
+# granularity — decomposed attention stages (glm4 exercises the (w, b) bias
+# consts path), parallel attn∥mamba with real scan payloads (hymba), and
+# the RWKV6 token-shift/decay/WKV-scan chain.
+
+DECOMPOSED_ARCHS = {"glm4-9b": 2, "hymba-1.5b": 2, "rwkv6-1.6b": 2}
+
+
+@pytest.mark.parametrize("arch", sorted(DECOMPOSED_ARCHS))
+def test_differential_decomposed_arch(arch, sess):
+    g, inputs, _ = _build_arch(arch, DECOMPOSED_ARCHS[arch])
+    # granularity reached the executable export, not only the cost model
+    stage = ".wkv_scan" if arch.startswith("rwkv") else ".softmax"
+    assert any(n.name.endswith(stage) for n in g)
+    exe = sess.optimize(g)
+    ref = run_sequential_uncompiled(g, inputs, output_ids=exe.output_ids)
+    _assert_matches(exe(inputs), ref)
+    exe_warm = sess.optimize(g)
+    assert exe_warm is exe
+    _assert_matches(exe_warm(inputs), ref)
+
+
+def test_differential_whisper_encdec(sess):
+    """Encoder-decoder export with real payloads: two INPUT nodes (frames +
+    tokens), cross-attention K/V branching off the encoder output."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.models.opgraph_export import build_encdec_opgraph
+
+    cfg = dataclasses.replace(get_config("whisper-medium", smoke=True),
+                              dtype=jnp.float32)
+    params = make_model(cfg).init(jax.random.key(0))
+    g = build_encdec_opgraph(cfg, 1, 4, n_layers=2, params=params)
+    assert any(n.name.endswith(".cross_softmax") for n in g)
+    rng = np.random.default_rng(7)
+    inputs = {
+        "frames": jnp.asarray(
+            rng.standard_normal(
+                (1, cfg.frontend.n_tokens, cfg.frontend.feat_dim)),
+            jnp.float32),
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 4)),
+                              jnp.int32),
+    }
+    exe = sess.optimize(g)
+    ref = run_sequential_uncompiled(g, inputs, output_ids=exe.output_ids)
+    _assert_matches(exe(inputs), ref)
+
+
+@pytest.mark.parametrize("arch,n_layers", [("qwen2-0.5b", 2),
+                                           ("kimi-k2-1t-a32b", 3)])
+def test_differential_bf16_weights(arch, n_layers, sess):
+    """bf16-weight exports: the capture pipeline (stacked vmap payloads,
+    fused branch GEMMs, grouped ragged-M kernels) must agree with op-by-op
+    sequential replay in low precision too.  Tolerance is bf16-scale: both
+    sides run the same math, but fusion may reassociate reductions."""
+    g, inputs, _ = _build_arch(arch, n_layers, dtype=jnp.bfloat16)
+    assert any(n.out_dtype == jnp.bfloat16 or
+               any(jnp.asarray(c).dtype == jnp.bfloat16
+                   for c in n.meta.get("consts", ()))
+               for n in g if n.fn is not None)
+    exe = sess.optimize(g)
+    ref = run_sequential_uncompiled(g, inputs, output_ids=exe.output_ids)
+    got = exe(inputs)
+    assert len(got) == len(ref)
+    for a, b in zip(got, ref):
+        np.testing.assert_allclose(
+            np.asarray(a, jnp.float32), np.asarray(b, jnp.float32),
+            rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_overflow_matches_sort_dispatch(sess):
+    """Production dispatch semantics under overflow: with capacities scaled
+    below the routed load, pairs whose within-expert rank exceeds capacity
+    are DROPPED (contribute zero), exactly like the stable-sort dispatch in
+    ``repro.models.ffn.moe_ffn_sort`` — the exporter's cumsum rank equals
+    the within-expert rank of a stable sort by expert id.  Verifies (a) the
+    compiled pipeline still matches sequential replay, (b) overflow really
+    happens, (c) every dispatch buffer equals the sort-based reference."""
+    from repro.configs import get_config
+    from repro.models.opgraph_export import _topk_routing
+
+    g, inputs, _ = _build_arch("kimi-k2-1t-a32b", 3, cap_scale=0.25, seq=8)
+    exe = sess.optimize(g)
+    ref = run_sequential_uncompiled(g, inputs, output_ids=exe.output_ids)
+    _assert_matches(exe(inputs), ref)
+
+    # replay op-by-op and check one MoE layer's dispatch rows
+    vals = {}
+    for node in g:
+        vals[node.op_id] = (inputs[node.name] if node.fn is None else
+                            node.fn(*[vals[p] for p in node.inputs],
+                                    *node.meta.get("consts", ())))
+    router = next(n for n in g if n.name == "L1.router")
+    n2 = next(n for n in g if n.name == "L1.norm2")
+    disps = sorted((n for n in g if n.name.startswith("L1.dispatch")),
+                   key=lambda n: int(n.name.rsplit("dispatch", 1)[1]))
+    nb = router.out_shape[-1]
+    moe = get_config("kimi-k2-1t-a32b", smoke=True).moe
+    top_k = min(moe.top_k, nb)
+    _, top_idx = _topk_routing(vals[router.op_id], nb, top_k,
+                               moe.router_aux_free)
+    expert_flat = np.asarray(top_idx).reshape(-1)
+    tok = np.repeat(np.arange(expert_flat.size // top_k), top_k)
+    caps = [n.out_shape[0] for n in disps]
+    counts = np.bincount(expert_flat, minlength=nb)
+    assert any(counts[j] > caps[j] for j in range(nb)), (
+        f"capacities {caps} never overflow (counts {counts}) — the "
+        f"re-routing path is untested")
+    d = vals[n2.op_id].shape[-1]
+    xf = np.asarray(vals[n2.op_id]).reshape(-1, d)
+    for j, n in enumerate(disps):
+        pairs = np.where(expert_flat == j)[0][: caps[j]]   # stable order
+        want = np.zeros((caps[j], xf.shape[-1]), xf.dtype)
+        want[: len(pairs)] = xf[tok[pairs]]
+        np.testing.assert_allclose(np.asarray(vals[n.op_id]), want,
+                                   rtol=1e-6, atol=1e-6)
